@@ -1,0 +1,58 @@
+"""Paper Figure 5 analogue: tensor-wise fp8 training is rescued by
+zero-init layer-scale; feature magnitudes E[|x_k|] stay flat with depth
+under layer-scale and grow without it.
+
+Uses a higher learning rate + deeper bench tower to push plain fp8_sim
+toward instability at CPU scale, then shows layer-scale controls it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+
+from benchmarks.common import BENCH_CLIP, train_clip
+
+DEEP = dataclasses.replace(BENCH_CLIP, vision_layers=8, text_layers=4)
+
+
+def run(steps: int = 150, out_json: str | None = None) -> dict:
+    results = {}
+    grid = [
+        ("bf16",            dict(quant_mode="bf16", layer_scale_init=None)),
+        ("fp8_tensorwise",  dict(quant_mode="fp8_sim", layer_scale_init=None)),
+        ("fp8_tensorwise+clip", dict(quant_mode="fp8_sim",
+                                     layer_scale_init=None, grad_clip=1.0)),
+        ("fp8_tensorwise+zero_ls", dict(quant_mode="fp8_sim",
+                                        layer_scale_init=0.0)),
+    ]
+    for name, kw in grid:
+        results[name] = train_clip(steps=steps, lr=3e-3, cfg=DEEP,
+                                   collect_stats=True, **kw)
+        r = results[name]
+        fs = r["feature_stats"]
+        depth_growth = (fs[-1] / max(fs[0], 1e-6)) if fs else float("nan")
+        print(f"  {name:24s} loss={r['final_loss']} "
+              f"acc={r['zero_shot_acc']:.3f} diverged={r['diverged']} "
+              f"|x| growth depth0->L: {depth_growth:.2f}x")
+        r["feature_depth_growth"] = depth_growth
+
+    ls = results["fp8_tensorwise+zero_ls"]
+    base = results["fp8_tensorwise"]
+    flat = (ls["feature_depth_growth"] < base["feature_depth_growth"]
+            or base["diverged"])
+    print(f"CLAIM zero-init layer-scale controls feature magnitudes: "
+          f"{'PASS' if flat else 'FAIL'}")
+    trains = not ls["diverged"]
+    print(f"CLAIM fp8+zero-LS trains without divergence: "
+          f"{'PASS' if trains else 'FAIL'}")
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump({k: {kk: vv for kk, vv in v.items() if kk != 'losses'}
+                       for k, v in results.items()}, f, indent=1)
+    return results
+
+
+if __name__ == "__main__":
+    run()

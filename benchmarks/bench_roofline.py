@@ -1,0 +1,73 @@
+"""§Roofline table: reads the dry-run JSON cells and prints the per-
+(arch × shape × mesh) three-term roofline with bottleneck + fraction."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.distributed.roofline import format_table
+
+
+def load_cells(result_dir: str = "results/dryrun"):
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(result_dir, "*.json"))):
+        with open(fn) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def run(result_dir: str = "results/dryrun") -> list:
+    rows = load_cells(result_dir)
+    if not rows:
+        print(f"(no dry-run results in {result_dir} — run "
+              f"`python -m repro.launch.dryrun --all` first)")
+        return []
+    keys = ("arch", "shape", "mesh", "t_compute_s", "t_memory_s",
+            "t_collective_s", "bottleneck", "useful_ratio",
+            "roofline_fraction", "quant_mode")
+    # §Roofline table is SINGLE-POD only (per assignment); multi-pod cells
+    # are compile-proof + memory (their per-component probes are skipped, so
+    # cost assembly would undercount scan bodies).
+    single = [r for r in rows if r.get("mesh") == "16x16"]
+    multi = [r for r in rows if r.get("mesh") != "16x16"]
+    norm = [{k: r.get(k, "") for k in keys} for r in single]
+    print("### §Roofline (single-pod 16x16, per-component assembled) ###")
+    print(format_table(norm, keys))
+    print(f"\n### Multi-pod 2x16x16 compile-proof: {len(multi)} cells "
+          f"compiled (memory/bytes-per-device in §Dry-run) ###")
+    for r in sorted(multi, key=lambda r: (r['arch'], r['shape'])):
+        tb = r.get("temp_bytes")
+        print(f"  {r['arch']:24s} {r['shape']:12s} temp/dev="
+              f"{(tb or 0)/1e9:7.2f}GB args/dev="
+              f"{(r.get('arg_bytes') or 0)/1e9:7.2f}GB")
+
+    # §Perf optimized sweep comparison, if present
+    opt_dir = result_dir.rstrip("/") + "_opt"
+    opt = [r for r in load_cells(opt_dir) if r.get("mesh") == "16x16"]
+    if opt:
+        base = {(r["arch"], r["shape"]): r for r in single}
+        print(f"\n### §Perf optimized sweep (results in {opt_dir}) ###")
+        print(f"{'arch':24s} {'shape':12s} {'base_frac':>10s} "
+              f"{'opt_frac':>10s} {'gain':>6s} {'bottleneck':>11s}")
+        gains = []
+        for r in sorted(opt, key=lambda r: (r["arch"], r["shape"])):
+            b = base.get((r["arch"], r["shape"]))
+            if not b:
+                continue
+            g = r["roofline_fraction"] / max(b["roofline_fraction"], 1e-12)
+            gains.append(g)
+            print(f"{r['arch']:24s} {r['shape']:12s} "
+                  f"{b['roofline_fraction']:10.4f} "
+                  f"{r['roofline_fraction']:10.4f} {g:5.1f}x "
+                  f"{r['bottleneck']:>11s}")
+        if gains:
+            import numpy as np
+            print(f"geomean gain: "
+                  f"{float(np.exp(np.mean(np.log(gains)))):.2f}x "
+                  f"over {len(gains)} cells")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,113 @@
+"""Shared benchmark helpers: a small CLIP trainer on synthetic data.
+
+The paper's experiments are CLIP ViT on LAION; this container is CPU-only
+and offline, so benchmarks shrink the model (same family/topology) and use
+`SyntheticCLIP` (procedurally correlated image-text pairs) — method
+*contrasts* (bf16 vs SwitchBack vs LLM.int8 vs fp8; AdamW vs StableAdamW)
+are preserved even though absolute accuracy is synthetic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import CLIPConfig, ParallelConfig, TrainConfig
+from repro.core.precision import QuantPolicy
+from repro.data import SyntheticCLIP
+from repro.models import build
+from repro.models.clip import clip_forward, zero_shot_accuracy
+from repro.models.params import init_params
+from repro.train import init_train_state, make_train_setup, make_train_step
+
+BENCH_CLIP = CLIPConfig(
+    name="bench-clip", image_size=32, patch_size=8,
+    vision_layers=4, vision_width=128, vision_heads=4, vision_ff=256,
+    text_layers=2, text_width=64, text_heads=2, text_ff=128,
+    text_vocab=256, text_ctx=16, embed_dim=64, patch_dropout=0.5)
+
+
+def train_clip(quant_mode: str = "bf16", *, steps: int = 200,
+               batch: int = 64, lr: float = 1e-3, beta2: float = 0.95,
+               optimizer: str = "stable_adamw", grad_clip: float = 0.0,
+               layer_scale_init: Optional[float] = None,
+               loss_scaler: str = "none", seed: int = 0,
+               collect_stats: bool = False,
+               n_classes: int = 32, noise: float = 0.3,
+               cfg: Optional[CLIPConfig] = None) -> Dict:
+    """Train the bench CLIP; returns loss curve + zero-shot accuracy +
+    per-block feature magnitudes."""
+    cfg = cfg or BENCH_CLIP
+    if layer_scale_init is not None:
+        cfg = dataclasses.replace(cfg, layer_scale_init=layer_scale_init)
+    bundle = build(cfg)
+    params = init_params(bundle.param_specs, jax.random.PRNGKey(seed))
+    tc = TrainConfig(optimizer=optimizer, learning_rate=lr,
+                     warmup_steps=max(steps // 10, 1), total_steps=steps,
+                     beta2=beta2, weight_decay=0.2,
+                     grad_clip_norm=grad_clip, loss_scaler=loss_scaler)
+    par = ParallelConfig(remat="block")
+    policy = QuantPolicy(quant_mode)
+    opt, scaler = make_train_setup(tc)
+    step = jax.jit(make_train_step(bundle, policy, par, tc, opt, scaler))
+    state = init_train_state(params, opt, scaler, seed)
+    data = SyntheticCLIP(cfg.image_size, cfg.text_ctx, cfg.text_vocab,
+                         n_classes=n_classes, noise=noise, seed=seed)
+
+    losses, rms_hist = [], []
+    t0 = time.time()
+    diverged = False
+    for i in range(steps):
+        b = data.batch(batch)
+        bj = {"images": jnp.asarray(b["images"]),
+              "texts": jnp.asarray(b["texts"])}
+        state, m = step(state, bj)
+        l = float(m["loss"])
+        losses.append(l)
+        if "rms" in m:
+            rms_hist.append(float(np.max([np.asarray(v)
+                                          for v in jax.tree.leaves(m["rms"])])))
+        if not np.isfinite(l) or l > 50.0:
+            diverged = True
+            break
+
+    # zero-shot eval on clean class prototypes
+    acc = float("nan")
+    stats = None
+    if not diverged:
+        proto = data.class_prototype_batch()
+        img, txt, stats = clip_forward(
+            state.params,
+            {"images": jnp.asarray(proto["images"]),
+             "texts": jnp.asarray(proto["texts"])},
+            cfg, policy, par, collect_stats=collect_stats)
+        eval_b = data.batch(256)
+        img_e, _, _ = clip_forward(
+            state.params,
+            {"images": jnp.asarray(eval_b["images"]),
+             "texts": jnp.asarray(eval_b["texts"])},
+            cfg, policy, par)
+        acc = float(zero_shot_accuracy(img_e, txt,
+                                       jnp.asarray(eval_b["class_ids"])))
+    return {"losses": losses, "final_loss": losses[-1] if losses else None,
+            "zero_shot_acc": acc, "diverged": diverged,
+            "feature_stats": (np.asarray(stats).tolist()
+                              if collect_stats and stats is not None else None),
+            "wall_s": time.time() - t0,
+            "max_rms": max(rms_hist) if rms_hist else None}
+
+
+def summarize(name: str, results: Dict[str, Dict]) -> List[str]:
+    lines = [f"## {name}", ""]
+    for k, r in results.items():
+        if r.get("diverged"):
+            lines.append(f"  {k:28s} DIVERGED (loss spiked past 50/NaN)")
+        else:
+            lines.append(f"  {k:28s} final_loss={r['final_loss']:.4f} "
+                         f"zero_shot={r['zero_shot_acc']*100:.1f}%")
+    lines.append("")
+    return lines

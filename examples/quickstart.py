@@ -1,0 +1,58 @@
+"""Quickstart: the paper's two contributions in ~40 lines.
+
+1. A SwitchBack int8 linear layer (fwd + dgrad int8, wgrad 16-bit).
+2. StableAdamW (AdamW + AdaFactor update clipping) surviving a
+   learning-signal shift that spikes plain AdamW.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import switchback_linear, QuantPolicy, quant_linear
+from repro.optim import stable_adamw, adamw
+
+key = jax.random.PRNGKey(0)
+k1, k2 = jax.random.split(key)
+
+# --- 1. SwitchBack linear --------------------------------------------------
+x = jax.random.normal(k1, (512, 256), jnp.bfloat16)        # (batch*seq, d)
+w = jax.random.normal(k2, (256, 1024), jnp.float32) * 0.05
+
+y_int8 = switchback_linear(x, w, variant="switchback")
+y_exact = x.astype(jnp.float32) @ w
+rel = float(jnp.max(jnp.abs(y_int8.astype(jnp.float32) - y_exact))
+            / jnp.max(jnp.abs(y_exact)))
+print(f"SwitchBack int8 forward: rel err vs exact = {rel:.4f}")
+
+# gradients: dX through int8, dW through bf16 (the 'switch back')
+dx, dw = jax.grad(lambda x, w: jnp.sum(
+    switchback_linear(x, w).astype(jnp.float32)), argnums=(0, 1))(x, w)
+print(f"grad dtypes: dX={dx.dtype} (int8 path), dW={dw.dtype} (16-bit path)")
+
+# the same thing through the model-wide precision policy:
+y = quant_linear(x, w, policy=QuantPolicy("int8_switchback"))
+print(f"policy dispatch ok: {y.shape} {y.dtype}")
+
+# --- 2. StableAdamW update clipping ----------------------------------------
+def run(opt, label):
+    p = {"w": jnp.zeros((8,))}
+    state = opt.init(p)
+    # 100 steps of tiny gradients -> stale second moment u_t
+    for _ in range(100):
+        p, state, _ = opt.update(p, state, {"w": jnp.full((8,), 1e-8)})
+    before = p["w"]
+    # the learning signal changes: one large gradient
+    p, state, aux = opt.update(p, state, {"w": jnp.ones((8,))})
+    step = float(jnp.max(jnp.abs(p["w"] - before)))
+    rms = aux.get("rms", {}).get("w")
+    print(f"{label:24s} step size after signal change: {step:.3f}"
+          + (f"  (RMS_t={float(rms):.1f})" if rms is not None else ""))
+
+run(stable_adamw(1.0, beta2=0.999, weight_decay=0.0), "StableAdamW (clipped)")
+run(adamw(1.0, beta2=0.999, weight_decay=0.0), "AdamW (unclipped)")
+print("-> StableAdamW caps the update at ~lr while AdamW overshoots "
+      "(the paper's stuck-in-the-past loss-spike mechanism, Fig. 9).")

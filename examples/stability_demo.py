@@ -1,0 +1,39 @@
+"""Stability demo (paper §3 in one script): induce a loss spike via a
+learning-signal shift under AdamW β₂=0.999, watch the embedding-layer
+RMS_t spike 1-8 iterations before the loss spike (paper Fig. 9 / App. D),
+then rerun with StableAdamW and watch the spike disappear.
+
+Run:  PYTHONPATH=src python examples/stability_demo.py
+"""
+import os
+import sys
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+from benchmarks.bench_stability import run_one  # noqa: E402
+
+
+def main():
+    print("== AdamW beta2=0.999 (paper's unstable baseline) ==")
+    a = run_one(optimizer="adamw", beta2=0.999, steps=160, shift_at=70)
+    print(f"  embedding RMS_t after the signal shift: "
+          f"{a['max_rms_after_shift']:.2f} (steady-state ~1; the "
+          f"'stuck-in-the-past' signature, paper Fig. 9)")
+    print(f"  loss 90 steps after the shift: {a['final_loss']:.3f}")
+
+    print("\n== StableAdamW (paper's fix: AdamW + update clipping) ==")
+    s = run_one(optimizer="stable_adamw", beta2=0.999, steps=160,
+                shift_at=70)
+    print(f"  loss 90 steps after the shift: {s['final_loss']:.3f}")
+
+    print(f"\nrecovery: StableAdamW {s['final_loss']:.3f} vs AdamW "
+          f"{a['final_loss']:.3f} — update clipping damps the oversized "
+          f"updates the stale second moment causes, so training recovers "
+          f"faster ('loss spikes slow learning as recovery time is "
+          f"required', paper §3.4).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""End-to-end driver: train a ~100M-param CLIP for a few hundred steps on
+synthetic image-text pairs with the paper's full recipe — SwitchBack int8
+linears, StableAdamW, patch dropout, warmup+cosine, checkpointing with
+auto-resume, straggler watchdog, RMS/loss-spike monitoring.
+
+Run:  PYTHONPATH=src python examples/train_clip.py [--steps 300]
+      [--quant-mode int8_switchback|bf16|fp8_sim] [--model small|100m]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import CLIPConfig, ParallelConfig, TrainConfig
+from repro.core.precision import QuantPolicy
+from repro.data import SyntheticCLIP
+from repro.models import build
+from repro.models.clip import clip_forward, zero_shot_accuracy
+from repro.models.params import init_params
+from repro.train import (Trainer, init_train_state, make_train_setup,
+                         make_train_step)
+
+# ~100M params: ViT-S-ish tower pair (full ViT-H does not fit CPU training)
+CLIP_100M = CLIPConfig(
+    name="clip-100m", image_size=64, patch_size=8,
+    vision_layers=12, vision_width=384, vision_heads=6, vision_ff=1536,
+    text_layers=6, text_width=512, text_heads=8, text_ff=2048,
+    text_vocab=16384, text_ctx=32, embed_dim=256, patch_dropout=0.5)
+
+CLIP_SMALL = CLIPConfig(
+    name="clip-small", image_size=32, patch_size=8,
+    vision_layers=4, vision_width=128, vision_heads=4, vision_ff=256,
+    text_layers=2, text_width=64, text_heads=2, text_ff=128,
+    text_vocab=256, text_ctx=16, embed_dim=64, patch_dropout=0.5)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--quant-mode", default="int8_switchback")
+    ap.add_argument("--model", default="small", choices=["small", "100m"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_clip_ckpt")
+    args = ap.parse_args()
+
+    cfg = CLIP_100M if args.model == "100m" else CLIP_SMALL
+    bundle = build(cfg)
+    params = init_params(bundle.param_specs, jax.random.PRNGKey(0))
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"model: {cfg.name} ({n/1e6:.1f}M params), "
+          f"precision: {args.quant_mode}")
+
+    tc = TrainConfig(optimizer="stable_adamw", learning_rate=1e-3,
+                     warmup_steps=args.steps // 10, total_steps=args.steps,
+                     beta2=0.95, weight_decay=0.2, loss_scaler="none",
+                     quant_mode=args.quant_mode)
+    par = ParallelConfig(remat="block")
+    policy = QuantPolicy(args.quant_mode)
+    opt, scaler = make_train_setup(tc)
+    step_fn = jax.jit(make_train_step(bundle, policy, par, tc, opt, scaler))
+    state = init_train_state(params, opt, scaler)
+
+    data = SyntheticCLIP(cfg.image_size, cfg.text_ctx, cfg.text_vocab,
+                         n_classes=64, seed=0)
+
+    def batch_at(i):
+        b = data.batch(args.batch)
+        return {"images": jnp.asarray(b["images"]),
+                "texts": jnp.asarray(b["texts"])}
+
+    trainer = Trainer(step_fn, state, checkpoint_dir=args.ckpt_dir,
+                      checkpoint_every=max(args.steps // 3, 50),
+                      watch_layers=("patch_embed",), log_every=20)
+    start = trainer.maybe_resume()
+    if start:
+        print(f"resumed from checkpoint at step {start}")
+    trainer.run(lambda i: batch_at(i), args.steps - start)
+
+    # zero-shot eval against clean class prototypes (paper's protocol shape)
+    proto = data.class_prototype_batch()
+    _, txt, _ = clip_forward(
+        trainer.state.params,
+        {"images": jnp.asarray(proto["images"]),
+         "texts": jnp.asarray(proto["texts"])}, cfg, policy, par)
+    ev = data.batch(512)
+    img, _, _ = clip_forward(
+        trainer.state.params,
+        {"images": jnp.asarray(ev["images"]),
+         "texts": jnp.asarray(ev["texts"])}, cfg, policy, par)
+    acc = zero_shot_accuracy(img, txt, jnp.asarray(ev["class_ids"]))
+    print(f"zero-shot synthetic accuracy: {float(acc)*100:.1f}% "
+          f"(chance {100/64:.1f}%)")
+    print("stability report:", trainer.stability_report())
+
+
+if __name__ == "__main__":
+    main()

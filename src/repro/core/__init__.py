@@ -1,0 +1,4 @@
+"""Core paper contributions: SwitchBack, quantization, fp8, layer-scale."""
+from repro.core.precision import QuantPolicy, quant_linear, MODES  # noqa: F401
+from repro.core.switchback import switchback_linear, VARIANTS  # noqa: F401
+from repro.core.layer_scale import init_layer_scale, apply_layer_scale  # noqa: F401

@@ -1,0 +1,63 @@
+"""Quantization-noise variance analysis (paper Appendix C).
+
+For an inner product ⟨û, v̂⟩ of quantized length-k vectors with elementwise
+quantization-noise variance σ_q², the paper derives (Eq. 12-14):
+
+    Var(⟨û, v̂⟩) = Var(⟨u, v⟩) + k · σ_q² (σ_u² + σ_v² + σ_q²)
+
+i.e. quantization variance grows *linearly in the inner dimension k*. This
+is the theoretical justification for SwitchBack: the weight-grad matmul has
+k = batch×seq (≈65 536 for CLIP ViT-H per the paper's App. C.3) while the
+fwd/dgrad matmuls have k ≤ 4·embed_dim — so only the weight grad must stay
+in 16-bit. This module provides the predicted bound and empirical
+measurement used by tests and `benchmarks/bench_variance.py`.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization as Q
+
+
+def predicted_quant_variance(k: int, sigma_u: float, sigma_v: float,
+                             sigma_q: float) -> float:
+    """The paper's Eq. (14) excess variance term: k·σ_q²(σ_u²+σ_v²+σ_q²)."""
+    return k * sigma_q ** 2 * (sigma_u ** 2 + sigma_v ** 2 + sigma_q ** 2)
+
+
+def rowwise_int8_noise_sigma(x: jax.Array) -> jax.Array:
+    """Empirical σ_q of row-wise int8 quantization of ``x``: the std of
+    (dequant(quant(x)) - x). For uniform rounding noise with step
+    Δ = absmax/127 this is ≈ Δ/sqrt(12)."""
+    q, s = Q.quantize_rowwise(x)
+    xh = Q.dequantize_rowwise(q, s)
+    return jnp.std(xh - x.astype(jnp.float32))
+
+
+def empirical_matmul_quant_error(key: jax.Array, b: int, k: int, m: int,
+                                 n_trials: int = 4) -> Tuple[float, float]:
+    """Measure Var(quantized_matmul - exact_matmul) per output element for a
+    row-wise×tensor-wise int8 matmul with iid N(0,1) operands, vs the App. C
+    prediction. Returns (measured_var, predicted_var)."""
+    errs = []
+    sigma_qs = []
+    for t in range(n_trials):
+        k1, k2, key = jax.random.split(key, 3)
+        x = jax.random.normal(k1, (b, k), jnp.float32)
+        w = jax.random.normal(k2, (m, k), jnp.float32)   # (m, n) convention
+        exact = x @ w.T
+        x_q, s_x = Q.quantize_rowwise(x)
+        w_q, s_w = Q.quantize_tensorwise(w)
+        approx = Q.int8_matmul_dequant_rowwise_tensorwise(x_q, w_q, s_x, s_w)
+        errs.append(jnp.var(approx - exact))
+        # noise sigma for each operand
+        sq_x = jnp.std(Q.dequantize_rowwise(x_q, s_x) - x)
+        sq_w = jnp.std(Q.dequantize_tensorwise(w_q, s_w) - w)
+        sigma_qs.append(jnp.sqrt(sq_x * sq_w))  # geometric mean of the two
+    measured = float(jnp.mean(jnp.stack(errs)))
+    sigma_q = float(jnp.mean(jnp.stack(sigma_qs)))
+    predicted = predicted_quant_variance(k, 1.0, 1.0, sigma_q)
+    return measured, predicted

@@ -1,0 +1,90 @@
+"""Bit-exact float8 (E4M3 / E5M2) simulation, independent of ml_dtypes.
+
+The paper (§2.2.1) simulates fp8 by "rounding to the exact values of the
+float8 data type" while performing arithmetic in 16-bit. `quantization.py`
+uses ml_dtypes casts for speed; this module provides a from-first-principles
+round-to-nearest-even fp8 rounding used as the oracle in tests (and by
+`kernels/fp8_cast/ref.py`).
+
+Formats follow Micikevicius et al., "FP8 formats for deep learning":
+
+  E4M3 (fn): 1 sign, 4 exp (bias 7),  3 mantissa. Max normal 448.
+             No infinities; S.1111.111 is NaN. Subnormal min 2^-9.
+  E5M2:      1 sign, 5 exp (bias 15), 2 mantissa. Max normal 57344.
+             IEEE-like: has inf/NaN. Subnormal min 2^-16.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class FP8Spec:
+    name: str
+    exp_bits: int
+    man_bits: int
+    bias: int
+    max_value: float        # largest finite magnitude
+
+
+E4M3 = FP8Spec("e4m3", exp_bits=4, man_bits=3, bias=7, max_value=448.0)
+E5M2 = FP8Spec("e5m2", exp_bits=5, man_bits=2, bias=15, max_value=57344.0)
+SPECS = {"e4m3": E4M3, "e5m2": E5M2}
+
+
+def fp8_values(spec: FP8Spec) -> np.ndarray:
+    """Enumerate every finite non-negative value representable in the format.
+    Used by tests to assert the rounding hits exactly these values."""
+    vals = [0.0]
+    # subnormals: mantissa/2^m * 2^(1-bias)
+    for m in range(1, 2 ** spec.man_bits):
+        vals.append(m / 2 ** spec.man_bits * 2.0 ** (1 - spec.bias))
+    # normals
+    max_exp_field = 2 ** spec.exp_bits - 1
+    for e in range(1, max_exp_field + 1):
+        for m in range(2 ** spec.man_bits):
+            v = (1 + m / 2 ** spec.man_bits) * 2.0 ** (e - spec.bias)
+            if v <= spec.max_value:
+                vals.append(v)
+    return np.unique(np.asarray(vals, dtype=np.float64))
+
+
+def fp8_round(x: jax.Array, spec: FP8Spec) -> jax.Array:
+    """Round-to-nearest-even onto the fp8 grid, saturating at max_value.
+
+    Pure jnp bit-free implementation: decompose |x| = frac * 2^exp with
+    frexp-style math, quantize the mantissa at the resolution the format
+    affords at that exponent, handling subnormal flush correctly.
+    """
+    xf = x.astype(jnp.float32)
+    sign = jnp.sign(xf)
+    mag = jnp.abs(xf)
+    mag = jnp.minimum(mag, spec.max_value)
+
+    # exponent of the leading bit (floor(log2 mag)) for normals
+    safe = jnp.maximum(mag, jnp.finfo(jnp.float32).tiny)
+    exp = jnp.floor(jnp.log2(safe))
+    # clamp to the normal range; below it we are subnormal with fixed step
+    min_normal_exp = 1 - spec.bias
+    exp = jnp.maximum(exp, min_normal_exp)
+    # quantization step at this exponent: 2^(exp - man_bits)
+    step = jnp.exp2(exp - spec.man_bits)
+    q = jnp.round(mag / step)  # round-half-to-even (jnp.round semantics)
+    out = q * step
+    # rounding can carry into the next binade (e.g. 1.9999 -> 2.0); that is
+    # still exactly representable, but may exceed max_value — re-saturate.
+    out = jnp.minimum(out, spec.max_value)
+    out = jnp.where(mag == 0.0, 0.0, out)
+    return (sign * out).astype(x.dtype)
+
+
+def fp8_quantization_step(mag: jax.Array, spec: FP8Spec) -> jax.Array:
+    """Absolute rounding step size at magnitude ``mag`` (for error-bound
+    property tests: |fp8_round(x) - x| <= step/2)."""
+    safe = jnp.maximum(jnp.abs(mag), jnp.finfo(jnp.float32).tiny)
+    exp = jnp.maximum(jnp.floor(jnp.log2(safe)), 1 - spec.bias)
+    return jnp.exp2(exp - spec.man_bits)

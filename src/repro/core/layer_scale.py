@@ -1,0 +1,34 @@
+"""Zero-init layer-scale (paper §2.3, Touvron et al. CaiT).
+
+A pre-norm transformer block with layer-scale vectors γ₁, γ₂:
+
+    x'  = x  + γ₁ * self_attention(norm₁(x))          (paper Eq. 5)
+    x'' = x' + γ₂ * mlp(norm₂(x'))                    (paper Eq. 6)
+
+With γ initialized to **zero** the transformer is the identity at init;
+the paper shows this keeps feature magnitudes E[|x_k|] small through depth
+(Fig. 5-right), which is what lets tensor-wise fp8 training converge where
+it otherwise diverges (Fig. 5-left).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def init_layer_scale(dim: int, init_value: float = 0.0,
+                     dtype=jnp.float32) -> Array:
+    """γ of shape (dim,). The paper uses 0.0 ("we use 0 for simplicity");
+    CaiT's 1e-4/1e-6 are available via ``init_value``. ``init_value=None``
+    upstream means layer-scale disabled (no parameter created)."""
+    return jnp.full((dim,), init_value, dtype=dtype)
+
+
+def apply_layer_scale(gamma: Array | None, branch_out: Array) -> Array:
+    """γ * branch_output (broadcast over leading dims); identity if γ is
+    None (layer-scale disabled)."""
+    if gamma is None:
+        return branch_out
+    return branch_out * gamma.astype(branch_out.dtype)

@@ -1,0 +1,95 @@
+"""Precision policy: how every linear layer in the framework computes.
+
+The paper's technique is integrated as a *first-class feature*: each model
+config carries a ``QuantPolicy`` and every linear dispatches through
+``quant_linear``. ``bf16`` is the paper's baseline; the int8/fp8 modes are
+the paper's methods and baselines (see core/switchback.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import switchback as SB
+
+Array = jax.Array
+
+MODES = (
+    "bf16", "fp16", "fp32",
+    "int8_switchback", "int8_switchback_m", "int8_switchback_q", "int8_llm",
+    "fp8_sim", "fp8_switchback",
+)
+
+_SB_VARIANT = {
+    "int8_switchback": "switchback",
+    "int8_switchback_m": "switchback_m",
+    "int8_switchback_q": "switchback_q",
+    "int8_llm": "llm_int8",
+    "fp8_sim": "fp8_sim",
+    "fp8_switchback": "fp8_switchback",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """Precision policy for linear layers + compute dtypes.
+
+    mode: one of MODES. Quantized modes apply to every transformer linear
+        (QKV/out projections, MLP, MoE experts, SSM in/out projections) —
+        exactly the layers the paper replaces (§1: ">90% of compute").
+        Embeddings, norms, routers and recurrences stay in ``compute_dtype``
+        (the paper keeps "other layers, such as layer norms, in higher
+        precision").
+    compute_dtype: activation dtype between quantized ops.
+    param_dtype: master weight dtype (f32; the optimizer sees this).
+    fwd_fmt / bwd_fmt: fp8 formats for forward operands / gradients.
+    """
+    mode: str = "bf16"
+    compute_dtype: jnp.dtype = jnp.bfloat16
+    param_dtype: jnp.dtype = jnp.float32
+    fwd_fmt: str = "e4m3"
+    bwd_fmt: str = "e5m2"
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"mode {self.mode!r} not in {MODES}")
+
+    @property
+    def is_quantized(self) -> bool:
+        return self.mode in _SB_VARIANT
+
+    def with_mode(self, mode: str) -> "QuantPolicy":
+        return dataclasses.replace(self, mode=mode)
+
+
+BF16 = QuantPolicy("bf16")
+FP16 = QuantPolicy("fp16", compute_dtype=jnp.float16)
+INT8_SWITCHBACK = QuantPolicy("int8_switchback")
+
+
+def quant_linear(x: Array, w: Array, b: Optional[Array] = None, *,
+                 policy: QuantPolicy = BF16) -> Array:
+    """The single entry point for every linear layer in the framework.
+
+    ``x``: (..., n) activations. ``w``: (n, m) master weights (param_dtype).
+    Quantized modes run the SwitchBack custom-VJP; 16/32-bit modes run a
+    plain dot in the compute dtype with f32 accumulation.
+    """
+    if policy.is_quantized:
+        xq = x.astype(policy.compute_dtype)
+        return SB.switchback_linear(
+            xq, w.astype(jnp.float32), b,
+            variant=_SB_VARIANT[policy.mode],
+            fwd_fmt=policy.fwd_fmt, bwd_fmt=policy.bwd_fmt)
+    cd = (jnp.float32 if policy.mode == "fp32" else policy.compute_dtype)
+    y = jax.lax.dot_general(
+        x.astype(cd), w.astype(cd),
+        dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(cd)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y

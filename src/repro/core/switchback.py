@@ -1,0 +1,260 @@
+"""SwitchBack: a linear layer for int8/fp8 quantized *training* (paper §2.2).
+
+The layer performs three matmuls:
+
+    forward:    Y  = X  W      (X: (b, n),  W: (n, m),  Y: (b, m))
+    input grad: Ẋ  = Ẏ  Wᵀ     (inner dim m — small, a multiple of embed dim)
+    weight grad:Ẇ  = Xᵀ Ẏ      (inner dim b = batch*seq — HUGE for CLIP)
+
+SwitchBack's insight (paper App. C): quantization variance grows linearly
+with the matmul inner dimension, so the weight-gradient matmul — whose inner
+dim is batch×seq — must stay in 16-bit, while the other two run in 8-bit.
+
+Variants (all released by the paper, all implemented here):
+
+* ``switchback``   (Alg. 1): row-wise X/Ẏ, tensor-wise W; residuals saved in
+                   the input dtype.
+* ``switchback_m`` (Alg. 3): memory-efficient — saves only the *int8* X and
+                   its state; X is dequantized on the backward pass before
+                   the 16-bit weight-grad matmul (small extra dequant cost,
+                   ~4x activation-memory saving).
+* ``switchback_q`` (Alg. 4): row-/column-wise W quantization instead of
+                   tensor-wise.
+* ``llm_int8``     LLM.int8()-style baseline: all *three* matmuls int8 with
+                   row/column-wise quantization — the paper's failing
+                   baseline (5.9pp drop at ViT-Huge), kept for comparison.
+* ``fp8_sim``      the paper's fp8 baseline: tensor-wise fp8 for inputs,
+                   weights and grads in all three matmuls (diverges at scale
+                   unless zero-init layer-scale is used, §2.3).
+* ``fp8_switchback``: SwitchBack with fp8 quantizers (row-wise E4M3 inputs,
+                   tensor-wise E4M3 weights, row-wise E5M2 grads, bf16 wgrad).
+
+Note on the GPU→TPU adaptation: the paper fuses a transpose into the weight
+quantizer (``tensor-wise_quantize_transpose``) because cuBLAS int8 only
+implements ABᵀ.  The TPU MXU contracts arbitrary dimension pairs through
+``lax.dot_general`` dimension numbers, so no transpose is ever materialized
+here — see DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization as Q
+
+Array = jax.Array
+Variant = Literal[
+    "switchback", "switchback_m", "switchback_q", "llm_int8",
+    "fp8_sim", "fp8_switchback",
+]
+
+VARIANTS: Tuple[str, ...] = (
+    "switchback", "switchback_m", "switchback_q", "llm_int8",
+    "fp8_sim", "fp8_switchback",
+)
+
+
+# ---------------------------------------------------------------------------
+# int8 contraction helpers (w stored (n_in, m_out), jnp convention)
+# ---------------------------------------------------------------------------
+
+def _dot_i8(a: Array, b: Array, contract: Tuple[int, int]) -> Array:
+    """int8 x int8 -> int32 contraction. On TPU this hits the MXU int8 path
+    (2x bf16 throughput); the Pallas kernel in kernels/switchback is the
+    hand-tiled equivalent."""
+    return jax.lax.dot_general(
+        a, b, dimension_numbers=(((contract[0],), (contract[1],)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def _dot_f32(a: Array, b: Array, contract: Tuple[int, int]) -> Array:
+    return jax.lax.dot_general(
+        a, b, dimension_numbers=(((contract[0],), (contract[1],)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+_I2 = Q.INT8_QMAX * Q.INT8_QMAX
+
+
+def _fwd_int8_rowwise_tensorwise(x: Array, w: Array, out_dtype):
+    """Eq. (3) forward: Y = (s_w/127² · s_x) ⊙ (Q_row(X) Q_tensor(W))."""
+    x_q, s_x = Q.quantize_rowwise(x)            # (b, n), (b, 1)
+    w_q, s_w = Q.quantize_tensorwise(w)         # (n, m), scalar
+    acc = _dot_i8(x_q, w_q, (1, 0))             # (b, m) int32
+    y = acc.astype(jnp.float32) * (s_x * (s_w / _I2))
+    return y.astype(out_dtype), (x_q, s_x, w_q, s_w)
+
+
+def _fwd_int8_rowwise_colwise(x: Array, w: Array, out_dtype):
+    """Eq. (4) forward (SwitchBackQ / LLM.int8): per-output-unit W scales."""
+    x_q, s_x = Q.quantize_rowwise(x)            # (b, n), (b, 1)
+    w_q, s_w = Q.quantize_columnwise(w)         # (n, m), (1, m)
+    acc = _dot_i8(x_q, w_q, (1, 0))             # (b, m)
+    y = acc.astype(jnp.float32) * (s_x * (s_w / _I2))
+    return y.astype(out_dtype), (x_q, s_x, w_q, s_w)
+
+
+def _dgrad_int8(g: Array, w_q: Array, s_g: Array, s_w, out_dtype):
+    """Ẋ = Ẏ Wᵀ in int8: contract over m (w_q dim 1). ``s_w`` scalar
+    (tensor-wise) or (1, m) — for the (1, m) case the scale does not factor
+    out of the contraction, so callers must pre-fold it into g (see below)."""
+    acc = _dot_i8(g, w_q, (1, 1))               # (b, n)
+    dx = acc.astype(jnp.float32) * (s_g * (s_w / _I2))
+    return dx.astype(out_dtype)
+
+
+def _wgrad_16bit(x: Array, g: Array) -> Array:
+    """Ẇ = Xᵀ Ẏ in 16-bit inputs / f32 accumulation — the SwitchBack "switch
+    back". Inner dim is b = batch*seq; App. C shows int8 noise here scales
+    with b and destroys training."""
+    return _dot_f32(x.astype(jnp.bfloat16), g.astype(jnp.bfloat16), (0, 0))
+
+
+def _wgrad_int8(x: Array, g: Array) -> Array:
+    """LLM.int8() weight grad: Ẇ[n,m] = Σ_b X[b,n] Ẏ[b,m] with X quantized
+    per-column-of-X (= per n, state (1,n)) and Ẏ per-column (= per m).
+    This is the matmul SwitchBack refuses to quantize."""
+    x_q, s_x = Q.quantize_columnwise(x)         # (b, n), (1, n)
+    g_q, s_g = Q.quantize_columnwise(g)         # (b, m), (1, m)
+    acc = _dot_i8(x_q, g_q, (0, 0))             # (n, m)
+    dw = acc.astype(jnp.float32) * (s_x.T * (s_g / _I2))
+    return dw
+
+
+# fp8 equivalents -----------------------------------------------------------
+
+def _fwd_fp8_tensorwise(x: Array, w: Array, out_dtype, fwd_fmt: str):
+    x_q, s_x = Q.quantize_tensorwise_fp8(x, fwd_fmt)
+    w_q, s_w = Q.quantize_tensorwise_fp8(w, fwd_fmt)
+    acc = _dot_f32(x_q, w_q, (1, 0))
+    y = acc * (s_x * s_w)
+    return y.astype(out_dtype), (x_q, s_x, w_q, s_w)
+
+
+def _fwd_fp8_rowwise_tensorwise(x: Array, w: Array, out_dtype, fwd_fmt: str):
+    x_q, s_x = Q.quantize_rowwise_fp8(x, fwd_fmt)
+    w_q, s_w = Q.quantize_tensorwise_fp8(w, fwd_fmt)
+    acc = _dot_f32(x_q, w_q, (1, 0))
+    y = acc * (s_x * s_w)
+    return y.astype(out_dtype), (x_q, s_x, w_q, s_w)
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp assembly
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def make_switchback_matmul(variant: str = "switchback",
+                           fwd_fmt: str = "e4m3",
+                           bwd_fmt: str = "e5m2"):
+    """Build the custom-VJP 2-D matmul ``f(x2d, w) -> y2d`` for a variant.
+
+    x2d: (b, n) activations (b = flattened batch*seq), w: (n, m) weights.
+    Gradients: dx in x.dtype, dw in f32 (master-weight precision).
+    """
+    if variant not in VARIANTS:
+        raise ValueError(f"unknown SwitchBack variant {variant!r}; "
+                         f"expected one of {VARIANTS}")
+
+    # ---------------- forward implementations -----------------------------
+    # The variant is static (factory closure), so residuals are pure arrays.
+    def fwd(x, w):
+        odt = x.dtype
+        if variant == "switchback":
+            y, (x_q, s_x, w_q, s_w) = _fwd_int8_rowwise_tensorwise(x, w, odt)
+            res = (x, w_q, s_w)                       # fp X + int8 W
+        elif variant == "switchback_m":
+            y, (x_q, s_x, w_q, s_w) = _fwd_int8_rowwise_tensorwise(x, w, odt)
+            res = (x_q, s_x, w_q, s_w)                # int8 residuals only
+        elif variant in ("switchback_q", "llm_int8"):
+            y, _ = _fwd_int8_rowwise_colwise(x, w, odt)
+            res = (x, w)                              # re-quantize W in bwd
+        elif variant == "fp8_sim":
+            y, _ = _fwd_fp8_tensorwise(x, w, odt, fwd_fmt)
+            res = (x, w)
+        elif variant == "fp8_switchback":
+            y, (x_q, s_x, w_q, s_w) = _fwd_fp8_rowwise_tensorwise(
+                x, w, odt, fwd_fmt)
+            res = (x, w_q, s_w)
+        return y, res
+
+    # ---------------- backward implementations ----------------------------
+    def bwd(res, g):
+        odt = g.dtype
+
+        if variant in ("switchback", "switchback_m"):
+            # dX: int8 (row-wise g, tensor-wise w). dW: 16-bit.
+            if variant == "switchback":
+                x, w_q, s_w = res
+            else:
+                x_q, s_x, w_q, s_w = res
+                x = Q.dequantize_rowwise(x_q, s_x, jnp.bfloat16)  # extra dequant (Alg. 3)
+            g_q, s_g = Q.quantize_rowwise(g)
+            dx = _dgrad_int8(g_q, w_q, s_g, s_w, odt)
+            dw = _wgrad_16bit(x, g)
+            return dx, dw
+
+        if variant in ("switchback_q", "llm_int8"):
+            x, w = res
+            g_q, s_g = Q.quantize_rowwise(g)
+            # column-wise W state (1, m) sits on the *contracted* dim of the
+            # dgrad matmul, so it cannot be folded out — quantize W row-wise
+            # along n instead (paper Alg. 4: column-wise_quantize_transpose,
+            # i.e. per-n scales after transposition; identical semantics).
+            w_q_n, s_w_n = Q.quantize_rowwise(w)      # (n, m), state (n, 1)
+            acc = _dot_i8(g_q, w_q_n, (1, 1))         # (b, n)
+            dx = (acc.astype(jnp.float32) * (s_g * (s_w_n.T / _I2))).astype(odt)
+            if variant == "llm_int8":
+                dw = _wgrad_int8(x, g)                # the fatal int8 wgrad
+            else:
+                dw = _wgrad_16bit(x, g)               # switchback_q
+            return dx, dw
+
+        if variant == "fp8_sim":
+            x, w = res
+            # everything tensor-wise fp8, grads in the gradient format
+            g_q, s_g = Q.quantize_tensorwise_fp8(g, bwd_fmt)
+            w_q, s_w = Q.quantize_tensorwise_fp8(w, fwd_fmt)
+            dx = (_dot_f32(g_q, w_q, (1, 1)) * (s_g * s_w)).astype(odt)
+            x_q, s_x = Q.quantize_tensorwise_fp8(x, fwd_fmt)
+            dw = _dot_f32(x_q, g_q, (0, 0)) * (s_x * s_g)
+            return dx, dw
+
+        if variant == "fp8_switchback":
+            x, w_q, s_w = res
+            g_q, s_g = Q.quantize_rowwise_fp8(g, bwd_fmt)
+            dx = (_dot_f32(g_q, w_q, (1, 1)) * (s_g * s_w)).astype(odt)
+            dw = _wgrad_16bit(x, g)
+            return dx, dw
+
+        raise AssertionError(variant)
+
+    @jax.custom_vjp
+    def switchback_matmul(x, w):
+        y, _ = fwd(x, w)
+        return y
+
+    switchback_matmul.defvjp(fwd, bwd)
+    return switchback_matmul
+
+
+def switchback_linear(x: Array, w: Array, b: Array | None = None, *,
+                      variant: str = "switchback",
+                      fwd_fmt: str = "e4m3", bwd_fmt: str = "e5m2") -> Array:
+    """Apply a SwitchBack linear to ``x`` of shape (..., n) with ``w`` of
+    shape (n, m). Leading dims are flattened for the 2-D quantized matmul
+    (row-wise state = one scale per token, as in the paper) and restored."""
+    n = x.shape[-1]
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, n))
+    f = make_switchback_matmul(variant, fwd_fmt, bwd_fmt)
+    y2 = f(x2, w)
+    y = y2.reshape(lead + (w.shape[-1],))
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y

@@ -1,0 +1,2 @@
+from repro.data.synthetic import BigramLM, SyntheticCLIP, SyntheticSeq2Seq  # noqa: F401
+from repro.data.pipeline import PrefetchIterator, shard_batch  # noqa: F401

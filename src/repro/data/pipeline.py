@@ -1,0 +1,77 @@
+"""Host-side data pipeline: deterministic sharded batching + prefetch.
+
+Fault-tolerance contract: the pipeline is a pure function of (seed, step),
+so on restart from a checkpoint at step k the iterator resumes at exactly
+batch k+1 — no data is repeated or skipped (the trainer stores `step` in
+the checkpoint). Prefetch runs one batch ahead on a worker thread so host
+data generation overlaps device compute.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+
+class DeterministicBatcher:
+    """Wraps a synthetic source so batch(step) is reproducible."""
+
+    def __init__(self, make_source: Callable[[int], object], seed: int = 0):
+        self._make_source = make_source
+        self._seed = seed
+
+    def batch_at(self, step: int, **kw) -> Dict[str, np.ndarray]:
+        src = self._make_source(self._seed + step)
+        return src.batch(**kw)
+
+
+class PrefetchIterator:
+    """One-deep background prefetch; `device_put_fn` shards onto the mesh."""
+
+    def __init__(self, batch_fn: Callable[[int], Dict], start_step: int = 0,
+                 device_put_fn: Optional[Callable] = None, depth: int = 2):
+        self._batch_fn = batch_fn
+        self._put = device_put_fn or (lambda x: x)
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._step = start_step
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self._step
+        while not self._stop.is_set():
+            try:
+                batch = self._batch_fn(step)
+            except Exception as e:              # surface in consumer
+                self._q.put(e)
+                return
+            self._q.put((step, batch))
+            step += 1
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if isinstance(item, Exception):
+            raise item
+        step, batch = item
+        return step, self._put(batch)
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+
+
+def shard_batch(batch: Dict[str, np.ndarray], shardings: Dict):
+    """device_put each array with its NamedSharding (global arrays)."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), batch, shardings)

@@ -1,0 +1,93 @@
+"""int8-compressed data-parallel gradient synchronization (beyond paper).
+
+ZeRO++-flavored: each DP rank row-wise int8-quantizes its local gradient
+shard (the paper's own Eq. 1 quantizer — reused from core/), all-gathers
+the int8 payload + f32 scales, dequantizes and averages locally. Wire bytes
+drop ~3.6x vs a bf16 ring all-reduce:
+
+    all-reduce bf16:   2·(n-1)/n · 2·D  ≈ 4·D bytes
+    all-gather int8:     (n-1)/n · (D + 4·D/row) ≈ 1.1·D bytes
+
+Error feedback (Seide et al.) keeps the quantization bias from
+accumulating: the residual (g - dequant(quant(g))) is added to the next
+step's gradient.
+
+Runs inside `shard_map` over the data axis (manual collectives); the model
+axis stays under GSPMD (auto). Exposed to the trainer via
+`ParallelConfig.grad_compression="int8_rowwise"`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization as Q
+
+
+def _rowwise_for_compression(g: jax.Array) -> Tuple[jax.Array, jax.Array, Any]:
+    """Flatten to (rows, 256) blocks for per-block scales (tail padded)."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    block = 256
+    pad = (-flat.shape[0]) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    mat = flat.reshape(-1, block)
+    q, s = Q.quantize_rowwise(mat)
+    return q, s, (g.shape, pad)
+
+
+def _decompress(q: jax.Array, s: jax.Array, meta) -> jax.Array:
+    shape, pad = meta
+    flat = Q.dequantize_rowwise(q, s).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape)
+
+
+def compressed_allreduce_mean(g: jax.Array, axis_name: str) -> jax.Array:
+    """Mean of ``g`` across `axis_name` with int8-on-the-wire payloads.
+    Call inside shard_map; per-rank input, replicated output."""
+    q, s, meta = _rowwise_for_compression(g)
+    q_all = jax.lax.all_gather(q, axis_name)          # (n, rows, 256) int8
+    s_all = jax.lax.all_gather(s, axis_name)          # (n, rows, 1) f32
+    deq = Q.dequantize_rowwise(q_all, s_all)          # (n, rows, 256)
+    mean = jnp.mean(deq, axis=0)
+    flat = mean.reshape(-1)
+    if meta[1]:
+        flat = flat[:-meta[1]]
+    return flat.reshape(meta[0])
+
+
+def compressed_tree_allreduce_mean(grads, axis_name: str,
+                                   error_feedback=None):
+    """Tree version with optional error feedback state.
+    Returns (synced_grads, new_error_feedback)."""
+    if error_feedback is not None:
+        grads = jax.tree.map(lambda g, e: g.astype(jnp.float32) + e,
+                             grads, error_feedback)
+
+    def one(g):
+        q, s, meta = _rowwise_for_compression(g)
+        local_deq = _decompress(q, s, meta)
+        synced = compressed_allreduce_mean(g, axis_name)
+        resid = g.astype(jnp.float32) - local_deq     # what quant dropped
+        return synced, resid
+
+    leaves, treedef = jax.tree.flatten(grads)
+    outs = [one(g) for g in leaves]
+    synced = treedef.unflatten([o[0] for o in outs])
+    new_ef = treedef.unflatten([o[1] for o in outs])
+    return synced, new_ef
+
+
+def wire_bytes_saved(n_params: int, n_ranks: int) -> dict:
+    """Analytical wire-byte comparison used in EXPERIMENTS.md §Perf."""
+    f = (n_ranks - 1) / n_ranks
+    bf16_allreduce = 2 * f * 2 * n_params
+    int8_allgather = f * (n_params + 4 * n_params / 256)
+    return {"bf16_allreduce": bf16_allreduce,
+            "int8_allgather": int8_allgather,
+            "reduction": bf16_allreduce / int8_allgather}

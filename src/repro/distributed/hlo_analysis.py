@@ -1,0 +1,166 @@
+"""Parse collectives out of optimized HLO text (the dry-run "profile").
+
+`cost_analysis()` does not report collective bytes, so we extract every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+from the compiled module text, with result shapes, dtypes and replica-group
+sizes, and convert to *wire bytes per device* using ring-algorithm factors:
+
+    all-gather        (n-1)/n · out_bytes
+    reduce-scatter    (n-1)/n · in_bytes
+    all-reduce        2·(n-1)/n · bytes        (RS + AG)
+    all-to-all        (n-1)/n · bytes
+    collective-permute  bytes                  (single hop)
+
+Caveat (documented in EXPERIMENTS.md): ops inside a while/scan body appear
+once in the HLO; the dry-run therefore measures collectives on the
+*unrolled per-component probes* and multiplies by the layer count, and uses
+the full-module parse only for schedule inspection.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[^)=]*\)?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    bytes: int            # result tuple total bytes
+    group_size: int       # participants per replica group
+    line: str = ""
+
+    @property
+    def wire_bytes_per_device(self) -> float:
+        n = max(self.group_size, 1)
+        if n == 1:
+            return 0.0
+        if self.kind == "all-reduce":
+            return 2.0 * (n - 1) / n * self.bytes
+        if self.kind == "collective-permute":
+            return float(self.bytes)
+        return (n - 1) / n * self.bytes
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        n_groups, per = int(m.group(1)), int(m.group(2))
+        return per
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("},")[0].strip("{}")
+        return len([x for x in first.split(",") if x.strip() != ""])
+    return n_devices
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> List[CollectiveOp]:
+    ops: List[CollectiveOp] = []
+    seen_starts = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        # async pairs: count the -start, skip the -done
+        opname = line.split("=", 1)[0].strip()
+        if "-done" in line.split("(")[0]:
+            continue
+        if opname in seen_starts:
+            continue
+        seen_starts.add(opname)
+        shape_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        if b == 0:
+            continue
+        ops.append(CollectiveOp(kind, b, _group_size(line, n_devices),
+                                line.strip()[:160]))
+    return ops
+
+
+def collective_summary(hlo_text: str, n_devices: int) -> Dict[str, float]:
+    ops = parse_collectives(hlo_text, n_devices)
+    out: Dict[str, float] = {k: 0.0 for k in COLLECTIVE_KINDS}
+    wire = 0.0
+    for op in ops:
+        out[op.kind] += op.bytes
+        wire += op.wire_bytes_per_device
+    out["n_ops"] = len(ops)
+    out["wire_bytes_per_device"] = wire
+    return out
+
+
+def count_dot_flops_by_dtype(hlo_text: str) -> Dict[str, float]:
+    """Classify dot FLOPs by precision from HLO text: int8 dots run at 2x
+    on the MXU, so the roofline credits them at 394 TOPS.
+    Returns {'int8': flops, 'other': flops}.
+
+    CPU HLO does not inline operand shapes in the dot line, so this is a
+    two-pass parse: (1) symbol table of %name -> (dtype, dims) from every
+    defining line; (2) for each ``dot``, contraction size from the lhs
+    operand's shape + contracting dims. An int8 dot is identified by its
+    s32 result (int8xint8 -> int32 accumulation) or s8 operands.
+    """
+    out = {"int8": 0.0, "other": 0.0}
+    def_re = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(\w+)\[([\d,]*)\]")
+    table: Dict[str, tuple] = {}
+    for line in hlo_text.splitlines():
+        m = def_re.match(line)
+        if m:
+            dims = [int(d) for d in m.group(3).split(",") if d]
+            table[m.group(1)] = (m.group(2), dims)
+
+    dot_line_re = re.compile(
+        r"=\s*(\w+)\[([\d,]*)\][^=]*?\bdot\(\s*(%[\w.\-]+)\s*,\s*(%[\w.\-]+)")
+    contract_re = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+    for line in hlo_text.splitlines():
+        m = dot_line_re.search(line)
+        if not m:
+            continue
+        res_dtype = m.group(1)
+        res_dims = [int(d) for d in m.group(2).split(",") if d]
+        lhs = table.get(m.group(3))
+        rhs = table.get(m.group(4))
+        cm = contract_re.search(line)
+        if lhs is None or cm is None:
+            continue
+        c_size = 1
+        for ci in cm.group(1).split(","):
+            if ci:
+                c_size *= lhs[1][int(ci)]
+        flops = 2.0 * c_size
+        for d in res_dims:
+            flops *= d
+        is_int8 = (res_dtype == "s32"
+                   or (lhs[0] == "s8" and rhs is not None and rhs[0] == "s8"))
+        out["int8" if is_int8 else "other"] += flops
+    return out

@@ -1,0 +1,117 @@
+"""Roofline model for TPU v5e-class hardware (assignment constants).
+
+Three terms per (arch × shape × mesh) cell, all *per chip*:
+
+    T_compute = dot_flops_int8/PEAK_INT8 + other_flops/PEAK_BF16
+    T_memory  = HLO bytes accessed / HBM_BW
+    T_coll    = collective wire bytes / ICI_BW
+
+Inputs come from the dry-run per-component compiles (cost_analysis +
+hlo_analysis), assembled as Σ countᵢ·costᵢ because scan bodies are counted
+once by XLA (probe-verified).
+
+MODEL_FLOPS uses the 6·N·D rule (6·N_active·D for MoE) to report the
+useful-compute ratio (catches remat/redundancy waste).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+PEAK_BF16 = 197e12        # FLOP/s per chip
+PEAK_INT8 = 394e12        # int8 OPs/s per chip (2x)
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+
+@dataclasses.dataclass
+class RooflineCell:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops_int8: float           # per device
+    flops_other: float          # per device
+    bytes_accessed: float       # per device
+    wire_bytes: float           # per device
+    model_flops_global: float   # 6·N·D analytical
+    notes: str = ""
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_int8 / PEAK_INT8 + self.flops_other / PEAK_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (global)."""
+        hlo_global = (self.flops_int8 + self.flops_other) * self.n_devices
+        return self.model_flops_global / max(hlo_global, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute time at peak / achievable step time — the MFU-style
+        score: (MODEL_FLOPS/chips/PEAK_BF16) / max(T_c, T_m, T_coll)."""
+        ideal = self.model_flops_global / self.n_devices / PEAK_BF16
+        return ideal / max(self.t_bound, 1e-30)
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "flops_int8_dev": self.flops_int8,
+            "flops_other_dev": self.flops_other,
+            "bytes_dev": self.bytes_accessed,
+            "wire_bytes_dev": self.wire_bytes,
+            "model_flops_global": self.model_flops_global,
+            "notes": self.notes,
+        }
+
+
+def model_flops(n_params_active: float, tokens: float,
+                kind: str = "train") -> float:
+    """6·N·D for training (fwd 2ND + bwd 4ND); 2·N·D for inference."""
+    return (6.0 if kind == "train" else 2.0) * n_params_active * tokens
+
+
+def format_table(cells, keys=("arch", "shape", "mesh", "t_compute_s",
+                              "t_memory_s", "t_collective_s", "bottleneck",
+                              "useful_ratio", "roofline_fraction")) -> str:
+    rows = [c.row() if isinstance(c, RooflineCell) else c for c in cells]
+    widths = {k: max(len(k), *(len(_fmt(r[k])) for r in rows)) for k in keys}
+    lines = [" | ".join(k.ljust(widths[k]) for k in keys)]
+    lines.append("-+-".join("-" * widths[k] for k in keys))
+    for r in rows:
+        lines.append(" | ".join(_fmt(r[k]).ljust(widths[k]) for k in keys))
+    return "\n".join(lines)
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) < 1e-2 or abs(v) >= 1e5:
+            return f"{v:.3e}"
+        return f"{v:.4f}"
+    return str(v)

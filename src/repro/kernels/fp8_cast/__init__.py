@@ -1,0 +1,1 @@
+from repro.kernels.fp8_cast import ops, ref  # noqa: F401

@@ -1,0 +1,23 @@
+"""Jit'd wrapper for the fp8 cast kernel with backend dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fp8_cast import fp8_cast as _k
+from repro.kernels.fp8_cast import ref as _ref
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "backend"))
+def fp8_cast_tensorwise(x, absmax, *, fmt: str = "e4m3", backend: str = "xla"):
+    if backend == "xla":
+        # ml_dtypes native cast — what the model graph uses
+        from repro.core.quantization import fp8_cast, FP8_MAX
+        scaled = x.astype(jnp.float32) / jnp.maximum(absmax, 1e-12)
+        return fp8_cast(scaled, fmt)
+    if backend == "ref":
+        return _ref.fp8_cast_tensorwise(x, absmax, fmt=fmt)
+    interp = backend == "pallas_interpret"
+    return _k.fp8_cast_tensorwise(x, absmax, fmt=fmt, interpret=interp)

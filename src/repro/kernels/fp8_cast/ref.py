@@ -1,0 +1,15 @@
+"""Oracle for the fp8 cast kernel: bit-level fp8 rounding from core/fp8.py
+(independent of ml_dtypes — the two implementations cross-check each other).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import fp8 as F8
+
+
+def fp8_cast_tensorwise(x, absmax, *, fmt: str = "e4m3"):
+    spec = F8.SPECS[fmt]
+    scaled = x.astype(jnp.float32) / jnp.maximum(absmax, 1e-12)
+    scaled = jnp.clip(scaled, -spec.max_value, spec.max_value)
+    return F8.fp8_round(scaled, spec).astype(jnp.float32)

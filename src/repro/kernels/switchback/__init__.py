@@ -1,0 +1,1 @@
+from repro.kernels.switchback import ops, ref  # noqa: F401

@@ -1,0 +1,139 @@
+"""Jit'd public wrappers for the SwitchBack kernels.
+
+Handles: backend dispatch (pallas TPU / pallas interpret / pure-XLA ref),
+shape padding to block multiples, and the Triton-autotune→static-heuristic
+block-size choice (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.switchback import ref as _ref
+from repro.kernels.switchback import switchback as _k
+
+Backend = Literal["xla", "pallas", "pallas_interpret"]
+
+# v5e VMEM is ~16 MiB; leave headroom for double-buffering (Pallas pipelines
+# two blocks per operand) and semaphores.
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+
+def choose_blocks(B: int, K: int, M: int) -> tuple[int, int, int]:
+    """Static replacement for Triton autotune: largest MXU-aligned tiles
+    whose double-buffered working set fits the VMEM budget.
+
+    Working set per grid step (int8 matmul):
+        2·(bb·bk) int8  +  2·(bk·bm) int8  +  bb·bm·4 acc  +  bb·bm·out
+    Preference order: grow bk (fewer accumulation passes over the output),
+    then bm, then bb — matching the paper's observation that speedup grows
+    with dim.
+    """
+    def fits(bb, bk, bm):
+        ws = 2 * bb * bk + 2 * bk * bm + bb * bm * 4 + bb * bm * 2
+        return ws <= VMEM_BUDGET_BYTES
+
+    bb, bm, bk = 256, 256, 512
+    while bk * 2 <= min(K, 4096) and fits(bb, bk * 2, bm):
+        bk *= 2
+    while bm * 2 <= min(M, 1024) and fits(bb, bk, bm * 2):
+        bm *= 2
+    while bb * 2 <= min(B, 1024) and fits(bb * 2, bk, bm):
+        bb *= 2
+    return bb, bk, bm
+
+
+def _pad_to(x: jax.Array, mult: tuple[int, int]) -> jax.Array:
+    pb = (-x.shape[0]) % mult[0]
+    pk = (-x.shape[1]) % mult[1]
+    if pb or pk:
+        x = jnp.pad(x, ((0, pb), (0, pk)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def row_quantize(x: jax.Array, backend: Backend = "xla"):
+    """x (B, K) -> (q int8 (B, K), state f32 (B, 1))."""
+    if backend == "xla":
+        return _ref.row_quantize(x)
+    interp = backend == "pallas_interpret"
+    B = x.shape[0]
+    bb = 256 if B >= 256 else B
+    xp = _pad_to(x, (bb, 1))
+    q, s = _k.row_quantize(xp, block_b=bb, interpret=interp)
+    return q[:B], s[:B]
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def tensor_quantize(x: jax.Array, backend: Backend = "xla"):
+    if backend == "xla":
+        return _ref.tensor_quantize(x)
+    interp = backend == "pallas_interpret"
+    R = x.shape[0]
+    br = min(512, R)
+    xp = _pad_to(x, (br, 1))   # zero rows don't change the absmax
+    q, s = _k.tensor_quantize(xp, block_rows=br, interpret=interp)
+    return q[:R], s
+
+
+@functools.partial(jax.jit, static_argnames=("transpose_w", "out_dtype", "backend"))
+def int8_matmul_dequant(x_q, w_q, row_scale, *, transpose_w=False,
+                        out_dtype=jnp.bfloat16, backend: Backend = "xla"):
+    """y = row_scale ⊙ (x_q · w_q[ᵀ]) with int32 accumulation.
+
+    `row_scale` is (B, 1) f32 and already folds the weight scale
+    (s_x · s_w/127²) so the epilogue is a single broadcast multiply.
+    """
+    if backend == "xla":
+        return _ref.int8_matmul_dequant(
+            x_q, w_q, row_scale, transpose_w=transpose_w, out_dtype=out_dtype)
+    interp = backend == "pallas_interpret"
+    B, K = x_q.shape
+    M = w_q.shape[0] if transpose_w else w_q.shape[1]
+    bb, bk, bm = choose_blocks(B, K, M)
+    xp = _pad_to(x_q, (bb, bk))
+    wp = _pad_to(w_q, (bm, bk) if transpose_w else (bk, bm))
+    sp = _pad_to(row_scale, (bb, 1))
+    y = _k.int8_matmul_dequant(
+        xp, wp, sp, transpose_w=transpose_w, out_dtype=out_dtype,
+        block_b=bb, block_m=bm, block_k=bk, interpret=interp)
+    return y[:B, :M]
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "backend"))
+def fused_switchback_fwd(x, w_q, s_w, *, out_dtype=jnp.bfloat16,
+                         backend: Backend = "xla"):
+    """Forward SwitchBack with fused X row-quantize (K in one VMEM block)."""
+    if backend == "xla":
+        return _ref.fused_switchback_fwd(x, w_q, s_w, out_dtype=out_dtype)
+    interp = backend == "pallas_interpret"
+    B, K = x.shape
+    M = w_q.shape[1]
+    bb = min(256, B)
+    bm = min(512, M)
+    xp = _pad_to(x, (bb, 1))
+    wp = _pad_to(w_q, (1, bm))
+    y = _k.fused_switchback_fwd(xp, wp, s_w, out_dtype=out_dtype,
+                                block_b=bb, block_m=bm, interpret=interp)
+    return y[:B, :M]
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def wgrad_bf16(x, g, backend: Backend = "xla"):
+    """Ẇ = Xᵀ Ẏ in bf16/f32 — the 16-bit 'switch back' matmul."""
+    if backend == "xla":
+        return _ref.wgrad_bf16(x, g)
+    interp = backend == "pallas_interpret"
+    B, K = x.shape
+    M = g.shape[1]
+    bb = min(512, B)
+    bk = min(256, K)
+    bm = min(256, M)
+    xp = _pad_to(x, (bb, bk))
+    gp = _pad_to(g, (bb, bm))
+    y = _k.wgrad_bf16(xp, gp, block_k=bk, block_m=bm, block_b=bb,
+                      interpret=interp)
+    return y[:K, :M]

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the SwitchBack Pallas kernels (allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def row_quantize(x: jax.Array):
+    xf = x.astype(jnp.float32)
+    absmax = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1, keepdims=True), 1e-12)
+    q = jnp.round(xf * (127.0 / absmax)).astype(jnp.int8)
+    return q, absmax
+
+
+def tensor_quantize(x: jax.Array):
+    xf = x.astype(jnp.float32)
+    absmax = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12).reshape(1, 1)
+    q = jnp.round(xf * (127.0 / absmax)).astype(jnp.int8)
+    return q, absmax
+
+
+def int8_matmul_dequant(x_q, w_q, row_scale, *, transpose_w=False,
+                        out_dtype=jnp.bfloat16):
+    dims = (((1,), (1,)), ((), ())) if transpose_w else (((1,), (0,)), ((), ()))
+    acc = jax.lax.dot_general(x_q, w_q, dimension_numbers=dims,
+                              preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * row_scale).astype(out_dtype)
+
+
+def fused_switchback_fwd(x, w_q, s_w, *, out_dtype=jnp.bfloat16):
+    x_q, s_x = row_quantize(x)
+    scale = s_x * (s_w.reshape(()) / (127.0 * 127.0))
+    return int8_matmul_dequant(x_q, w_q, scale, out_dtype=out_dtype)
+
+
+def wgrad_bf16(x, g):
+    return jax.lax.dot_general(
+        x.astype(jnp.bfloat16), g.astype(jnp.bfloat16),
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)

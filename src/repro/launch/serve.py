@@ -1,0 +1,57 @@
+"""Serving launcher: batched decode with KV caches / recurrent state.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b \
+        --batch 4 --new-tokens 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALL_ARCHS, get_reduced_config
+from repro.configs.base import ParallelConfig
+from repro.core.precision import QuantPolicy
+from repro.models import build
+from repro.models import transformer as TF
+from repro.models.params import init_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--quant-mode", default="bf16")
+    args = ap.parse_args()
+
+    cfg = get_reduced_config(args.arch)
+    if cfg.family == "encdec" or getattr(cfg, "family", "") == "clip":
+        raise SystemExit("use examples/serve_lm.py for decoder-only archs; "
+                         "enc-dec serving lives in repro.models.encdec")
+    par = ParallelConfig(remat="none")
+    pol = QuantPolicy(args.quant_mode)
+    params = init_params(build(cfg).param_specs, jax.random.PRNGKey(0))
+    B = args.batch
+    max_len = args.prompt_len + args.new_tokens
+    state = TF.init_decode_state(cfg, B, max_len)
+    decode = jax.jit(lambda p, s, t: TF.decode_step(p, s, t, cfg, pol, par))
+
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, 1), 0,
+                                cfg.vocab_size)
+    t0 = time.time()
+    n = 0
+    for _ in range(args.prompt_len + args.new_tokens):
+        logits, state = decode(params, state, tokens)
+        tokens = jnp.argmax(logits[:, -1], -1)[:, None]
+        n += B
+    jax.block_until_ready(tokens)
+    print(f"{args.arch}: {n} tokens in {time.time()-t0:.2f}s "
+          f"({n/(time.time()-t0):.0f} tok/s, CPU, {args.quant_mode})")
+
+
+if __name__ == "__main__":
+    main()

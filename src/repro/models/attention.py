@@ -1,0 +1,214 @@
+"""Grouped-query attention with RoPE, flash-style chunked softmax, KV cache.
+
+Two implementations:
+
+* ``dense``      — materializes (B, H, Sq, Sk) scores; fine for short seqs.
+* ``flash_scan`` — online-softmax over KV chunks via lax.scan; the score
+                   matrix never exceeds (B, H, Sq, chunk). This is the
+                   TPU-idiomatic analogue of flash attention: blockwise
+                   compute with running max/denominator, driving peak
+                   activation memory from O(S²) to O(S·chunk). Used for the
+                   32k prefill shapes.
+
+All projections route through ``quant_linear`` so SwitchBack (the paper's
+technique) applies to K/Q/V/out exactly as described in paper §1.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import QuantPolicy, quant_linear
+from repro.models import params as PRM
+from repro.models.common import apply_rope
+
+Array = jax.Array
+NEG_INF = -2.0e38
+
+
+class KVCache(NamedTuple):
+    k: Array          # (B, S_max, n_kv, hd)
+    v: Array          # (B, S_max, n_kv, hd)
+    length: Array     # scalar int32 — tokens currently cached
+
+
+def qkv_project(x: Array, p: dict, cfg, policy: QuantPolicy):
+    """x: (B, S, D) -> q (B,S,H,hd), k,v (B,S,KV,hd)."""
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    cd = policy.compute_dtype
+    wq = PRM.use_weight(p["wq"], ("embed", "heads"), cd)
+    wk = PRM.use_weight(p["wk"], ("embed", "kv_heads"), cd)
+    wv = PRM.use_weight(p["wv"], ("embed", "kv_heads"), cd)
+    q = quant_linear(x, wq, policy=policy).reshape(B, S, H, hd)
+    k = quant_linear(x, wk, policy=policy).reshape(B, S, KV, hd)
+    v = quant_linear(x, wv, policy=policy).reshape(B, S, KV, hd)
+    return q, k, v
+
+
+def _expand_kv(k: Array, n_heads: int) -> Array:
+    """(B, S, KV, hd) -> (B, S, H, hd) by repeating each KV head."""
+    B, S, KV, hd = k.shape
+    rep = n_heads // KV
+    return jnp.repeat(k, rep, axis=2) if rep > 1 else k
+
+
+def dense_attention(q: Array, k: Array, v: Array, *, causal: bool,
+                    q_offset: int | Array = 0,
+                    kv_len: Optional[Array] = None) -> Array:
+    """Standard softmax attention. q: (B,Sq,H,hd); k,v: (B,Sk,H,hd)."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    if causal or kv_len is not None:
+        kpos = jnp.arange(Sk)[None, None, None, :]
+        mask = jnp.zeros((1, 1, 1, Sk), jnp.bool_)
+        if causal:
+            qpos = q_offset + jnp.arange(Sq)
+            mask = mask | (kpos > qpos[None, None, :, None])
+        if kv_len is not None:
+            mask = mask | (kpos >= kv_len)
+        s = jnp.where(mask, NEG_INF, s)
+    a = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", a, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def flash_scan_attention(q: Array, k: Array, v: Array, *, causal: bool,
+                         chunk: int = 1024) -> Array:
+    """Online-softmax attention, scanning over KV chunks.
+
+    Memory: O(B·H·Sq·chunk) scores instead of O(B·H·Sq·Sk). The scan keeps
+    running (max, denominator, weighted-sum) per query — numerically
+    identical to softmax attention up to fp error.
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    if Sk % chunk:
+        pad = chunk - Sk % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pad_mask_len = Sk
+        Sk = k.shape[1]
+    else:
+        pad_mask_len = None
+    n_chunks = Sk // chunk
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    qf = q.astype(jnp.float32) * scale
+    kc = k.reshape(B, n_chunks, chunk, H, hd)
+    vc = v.reshape(B, n_chunks, chunk, H, hd)
+    qpos = jnp.arange(Sq)
+
+    def body(carry, inp):
+        m, l, acc = carry                     # (B,H,Sq), (B,H,Sq), (B,H,Sq,hd)
+        kb, vb, c_idx = inp                   # (B,chunk,H,hd) ×2, scalar
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kb.astype(jnp.float32))
+        kpos = c_idx * chunk + jnp.arange(chunk)
+        mask = jnp.zeros((Sq, chunk), jnp.bool_)
+        if causal:
+            mask = mask | (kpos[None, :] > qpos[:, None])
+        if pad_mask_len is not None:
+            mask = mask | (kpos[None, :] >= pad_mask_len)
+        s = jnp.where(mask[None, None], NEG_INF, s)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((B, H, Sq), NEG_INF, jnp.float32),
+            jnp.zeros((B, H, Sq), jnp.float32),
+            jnp.zeros((B, H, Sq, hd), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(
+        body, init,
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+         jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.transpose(out, (0, 2, 1, 3)).astype(q.dtype)   # (B,Sq,H,hd)
+
+
+def attention_block(x: Array, p: dict, cfg, policy: QuantPolicy, *,
+                    positions: Array, causal: bool = True,
+                    impl: str = "flash_scan") -> Array:
+    """Full self-attention sub-block: QKV proj -> RoPE -> attn -> out proj."""
+    q, k, v = qkv_project(x, p, cfg, policy)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    # no seq name here: under sequence-parallel the residual stream owns
+    # the model axis on seq; attention internals shard heads instead
+    q = PRM.constrain(q, ("batch", None, "heads", None))
+    k = PRM.constrain(k, ("batch", None, "kv_heads", None))
+    kx = _expand_kv(k, cfg.n_heads)
+    vx = _expand_kv(v, cfg.n_heads)
+    if impl == "flash_scan" and x.shape[1] > 2048:
+        o = flash_scan_attention(q, kx, vx, causal=causal)
+    else:
+        o = dense_attention(q, kx, vx, causal=causal)
+    o = o.reshape(x.shape[0], x.shape[1], cfg.n_heads * cfg.hd)
+    wo = PRM.use_weight(p["wo"], ("heads", "embed"), policy.compute_dtype)
+    return quant_linear(o, wo, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# decode path (KV cache)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                   jnp.zeros((), jnp.int32))
+
+
+def attention_decode_step(x: Array, cache: KVCache, p: dict, cfg,
+                          policy: QuantPolicy) -> tuple[Array, KVCache]:
+    """One-token decode: x (B, 1, D); cache holds `length` past tokens."""
+    B = x.shape[0]
+    pos = cache.length[None, None]                       # (1,1) broadcast pos
+    q, k, v = qkv_project(x, p, cfg, policy)
+    q = apply_rope(q, jnp.broadcast_to(pos, (B, 1)), cfg.rope_theta)
+    k = apply_rope(k, jnp.broadcast_to(pos, (B, 1)), cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, k.astype(cache.k.dtype), cache.length, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache.v, v.astype(cache.v.dtype), cache.length, axis=1)
+    kx = _expand_kv(k_cache, cfg.n_heads)
+    vx = _expand_kv(v_cache, cfg.n_heads)
+    o = dense_attention(q, kx, vx, causal=False, kv_len=cache.length + 1)
+    o = o.reshape(B, 1, cfg.n_heads * cfg.hd)
+    wo = PRM.use_weight(p["wo"], ("heads", "embed"), policy.compute_dtype)
+    out = quant_linear(o, wo, policy=policy)
+    return out, KVCache(k_cache, v_cache, cache.length + 1)
+
+
+def cross_attention(x: Array, enc_kv: tuple[Array, Array], p: dict, cfg,
+                    policy: QuantPolicy) -> Array:
+    """Encoder-decoder cross attention; enc_kv are precomputed (B,Se,KV,hd)."""
+    B, S, _ = x.shape
+    wq = PRM.use_weight(p["wq"], ("embed", "heads"), policy.compute_dtype)
+    q = quant_linear(x, wq, policy=policy).reshape(
+        B, S, cfg.n_heads, cfg.hd)
+    k, v = enc_kv
+    kx = _expand_kv(k, cfg.n_heads)
+    vx = _expand_kv(v, cfg.n_heads)
+    o = dense_attention(q, kx, vx, causal=False)
+    o = o.reshape(B, S, cfg.n_heads * cfg.hd)
+    wo = PRM.use_weight(p["wo"], ("heads", "embed"), policy.compute_dtype)
+    return quant_linear(o, wo, policy=policy)
+
+
+def encode_cross_kv(enc_out: Array, p: dict, cfg, policy: QuantPolicy):
+    B, Se, _ = enc_out.shape
+    wk = PRM.use_weight(p["wk"], ("embed", "kv_heads"), policy.compute_dtype)
+    k = quant_linear(enc_out, wk, policy=policy).reshape(
+        B, Se, cfg.n_kv_heads, cfg.hd)
+    wv = PRM.use_weight(p["wv"], ("embed", "kv_heads"), policy.compute_dtype)
+    v = quant_linear(enc_out, wv, policy=policy).reshape(
+        B, Se, cfg.n_kv_heads, cfg.hd)
+    return k, v

@@ -1,0 +1,25 @@
+"""Stub modality frontends (per the assignment: [vlm]/[audio] entries are
+transformer BACKBONES; the modality frontend provides precomputed
+embeddings).
+
+`frontend_embed_shape` defines the (frames/patches, feature_dim) the stub
+delivers; `synthetic_frontend_batch` draws random features for smoke tests
+and examples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def frontend_embed_shape(cfg: ModelConfig, batch: int):
+    """(B, n_frontend_tokens, d_model) precomputed patch/frame embeddings."""
+    assert cfg.frontend in ("vision_stub", "audio_stub")
+    return (batch, cfg.frontend_tokens, cfg.d_model)
+
+
+def synthetic_frontend_batch(key: jax.Array, cfg: ModelConfig, batch: int,
+                             dtype=jnp.bfloat16):
+    return jax.random.normal(key, frontend_embed_shape(cfg, batch), dtype)

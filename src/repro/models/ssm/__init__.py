@@ -1,0 +1,2 @@
+from repro.models.ssm.rwkv6 import rwkv6_block, rwkv_channel_mix, RWKVState  # noqa: F401
+from repro.models.ssm.mamba import mamba_block, MambaState  # noqa: F401

@@ -1,0 +1,437 @@
+"""Decoder-only LM assembly for all assigned architecture families.
+
+Layer heterogeneity (Jamba's 1-attn-per-8 + MoE-every-2, Qwen3's all-MoE,
+RWKV's attention-free stack) is handled with a *period group*: the layer
+pattern repeats with period P = lcm(attention period, MoE period); the model
+scans over L/P groups, unrolling the P heterogeneous layers inside the group
+body. This keeps HLO size O(P) instead of O(L) (probe: 186s unrolled vs 2.5s
+scanned compile at 20B scale) while supporting mixed layer kinds.
+
+The same `group_apply` body is reused by the dry-run cost probes
+(launch/dryrun.py) so per-layer FLOPs/bytes/collectives are measured from
+exactly the compiled computation and multiplied by the group count.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.core.layer_scale import apply_layer_scale
+from repro.core.precision import QuantPolicy, quant_linear
+from repro.models import params as PRM
+from repro.models.params import ParamSpec
+from repro.models import attention as ATT
+from repro.models.common import apply_norm, cross_entropy_loss
+from repro.models.mlp import mlp_block
+from repro.models.moe import moe_block
+from repro.models.ssm.mamba import mamba_block, MambaState
+from repro.models.ssm.rwkv6 import rwkv6_block, rwkv_channel_mix, RWKVState
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# period structure
+# ---------------------------------------------------------------------------
+
+def period(cfg: ModelConfig) -> int:
+    p = 1
+    if cfg.attn_layer_period:
+        p = math.lcm(p, cfg.attn_layer_period)
+    if cfg.moe is not None and cfg.moe.every_n_layers > 1:
+        p = math.lcm(p, cfg.moe.every_n_layers)
+    assert cfg.n_layers % p == 0, (cfg.n_layers, p)
+    return p
+
+
+def n_groups(cfg: ModelConfig) -> int:
+    return cfg.n_layers // period(cfg)
+
+
+# ---------------------------------------------------------------------------
+# per-layer parameter specs
+# ---------------------------------------------------------------------------
+
+def _norm_spec(cfg) -> Dict[str, ParamSpec]:
+    d = {"scale": ParamSpec((cfg.d_model,), ("embed",), "ones")}
+    if cfg.norm == "layernorm":
+        d["bias"] = ParamSpec((cfg.d_model,), ("embed",), "zeros")
+    return d
+
+
+def _attn_specs(cfg) -> Dict[str, ParamSpec]:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    return {
+        "wq": ParamSpec((D, H * hd), ("embed", "heads"), "fan_in", 1.0),
+        "wk": ParamSpec((D, KV * hd), ("embed", "kv_heads"), "fan_in", 1.0),
+        "wv": ParamSpec((D, KV * hd), ("embed", "kv_heads"), "fan_in", 1.0),
+        "wo": ParamSpec((H * hd, D), ("heads", "embed"), "fan_in", 1.0),
+    }
+
+
+def _mlp_specs(cfg, d_ff=None) -> Dict[str, ParamSpec]:
+    D, FF = cfg.d_model, d_ff or cfg.d_ff
+    s = {
+        "w_up": ParamSpec((D, FF), ("embed", "mlp"), "fan_in", 1.0),
+        "w_down": ParamSpec((FF, D), ("mlp", "embed"), "fan_in", 1.0),
+    }
+    if cfg.act == "swiglu":
+        s["w_gate"] = ParamSpec((D, FF), ("embed", "mlp"), "fan_in", 1.0)
+    return s
+
+
+def _moe_specs(cfg) -> Dict[str, ParamSpec]:
+    moe = cfg.moe
+    D, FF, E = cfg.d_model, cfg.d_ff, moe.n_experts
+    s = {
+        "w_router": ParamSpec((D, E), ("embed", None), "fan_in", 1.0),
+        "w_up": ParamSpec((E, D, FF), ("experts", "embed", "mlp"), "fan_in", 1.0),
+        "w_down": ParamSpec((E, FF, D), ("experts", "mlp", "embed"), "fan_in", 1.0),
+    }
+    if cfg.act == "swiglu":
+        s["w_gate"] = ParamSpec((E, D, FF), ("experts", "embed", "mlp"),
+                                "fan_in", 1.0)
+    return s
+
+
+def _mamba_specs(cfg) -> Dict[str, ParamSpec]:
+    mc = cfg.mamba
+    D = cfg.d_model
+    d_in = mc.expand * D
+    dt_rank = mc.dt_rank or -(-D // 16)
+    N = mc.d_state
+    return {
+        "w_in": ParamSpec((D, 2 * d_in), ("embed", "mlp"), "fan_in", 1.0),
+        "conv_w": ParamSpec((mc.d_conv, d_in), ("conv", "mlp"), "normal", 0.02),
+        "conv_b": ParamSpec((d_in,), ("mlp",), "zeros"),
+        "w_x_proj": ParamSpec((d_in, dt_rank + 2 * N), ("mlp", None),
+                              "fan_in", 1.0),
+        "w_dt": ParamSpec((dt_rank, d_in), ("lora", "mlp"), "fan_in", 1.0),
+        "dt_bias": ParamSpec((d_in,), ("mlp",), "zeros"),
+        "A_log": ParamSpec((d_in, N), ("mlp", "state"), "constant", 0.0),
+        "D": ParamSpec((d_in,), ("mlp",), "ones"),
+        "w_out": ParamSpec((d_in, D), ("mlp", "embed"), "fan_in", 1.0),
+    }
+
+
+def _rwkv_specs(cfg) -> Dict[str, ParamSpec]:
+    rc = cfg.rwkv
+    D = cfg.d_model
+    H = D // rc.head_dim
+    lr = rc.mix_lora
+    dr = rc.decay_lora
+    mixes = {}
+    for nm in ("r", "k", "v", "w", "g", "ck", "cr"):
+        mixes[f"mu_{nm}"] = ParamSpec((D,), ("embed",), "constant", 0.5)
+        mixes[f"mix_lora_b_{nm}"] = ParamSpec((lr, D), ("lora", "embed"),
+                                              "zeros")
+    return {
+        **mixes,
+        "mix_lora_a": ParamSpec((D, lr), ("embed", "lora"), "fan_in", 1.0),
+        "w0": ParamSpec((D,), ("embed",), "constant", -6.0),
+        "w_lora_a": ParamSpec((D, dr), ("embed", "lora"), "fan_in", 1.0),
+        "w_lora_b": ParamSpec((dr, D), ("lora", "embed"), "zeros"),
+        "u": ParamSpec((D,), ("embed",), "normal", 0.5),
+        "wr": ParamSpec((D, D), ("embed", "heads"), "fan_in", 1.0),
+        "wk": ParamSpec((D, D), ("embed", "heads"), "fan_in", 1.0),
+        "wv": ParamSpec((D, D), ("embed", "heads"), "fan_in", 1.0),
+        "wg": ParamSpec((D, D), ("embed", "heads"), "fan_in", 1.0),
+        "wo": ParamSpec((D, D), ("heads", "embed"), "fan_in", 1.0),
+        "ln_x": ParamSpec((D,), ("embed",), "ones"),
+        # channel mix
+        "w_key": ParamSpec((D, cfg.d_ff), ("embed", "mlp"), "fan_in", 1.0),
+        "w_value": ParamSpec((cfg.d_ff, D), ("mlp", "embed"), "fan_in", 1.0),
+        "w_receptance": ParamSpec((D, D), ("embed", "heads"), "fan_in", 1.0),
+    }
+
+
+def layer_specs(cfg: ModelConfig, layer_idx: int) -> Dict[str, Any]:
+    kind = cfg.layer_kind(layer_idx)
+    specs: Dict[str, Any] = {"norm1": _norm_spec(cfg), "norm2": _norm_spec(cfg)}
+    if kind == "attn":
+        specs["attn"] = _attn_specs(cfg)
+    elif kind == "mamba":
+        specs["mamba"] = _mamba_specs(cfg)
+    elif kind == "rwkv":
+        specs["rwkv"] = _rwkv_specs(cfg)
+    if kind != "rwkv":   # rwkv channel-mix params live in the rwkv dict
+        if cfg.layer_is_moe(layer_idx):
+            specs["moe"] = _moe_specs(cfg)
+            if cfg.moe.dense_residual:
+                specs["dense_mlp"] = _mlp_specs(cfg, cfg.moe.dense_residual_ff)
+        else:
+            specs["mlp"] = _mlp_specs(cfg)
+    if cfg.layer_scale_init is not None:
+        init = ("zeros" if cfg.layer_scale_init == 0.0 else "constant")
+        specs["gamma1"] = ParamSpec((cfg.d_model,), ("embed",), init,
+                                    cfg.layer_scale_init)
+        specs["gamma2"] = ParamSpec((cfg.d_model,), ("embed",), init,
+                                    cfg.layer_scale_init)
+    return specs
+
+
+def _stack_specs(specs, n: int):
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.logical,
+                            s.init, s.scale, s.dtype),
+        specs, is_leaf=PRM.is_spec)
+
+
+def param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    P = period(cfg)
+    G = n_groups(cfg)
+    blocks = {f"pos{i}": _stack_specs(layer_specs(cfg, i), G)
+              for i in range(P)}
+    specs: Dict[str, Any] = {
+        "embed": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                           "normal", 0.02),
+        "blocks": blocks,
+        "final_norm": _norm_spec(cfg),
+    }
+    if not cfg.tie_embeddings:
+        specs["head"] = ParamSpec((cfg.d_model, cfg.vocab_size),
+                                  ("embed", "vocab"), "fan_in", 1.0)
+    if cfg.frontend is not None:
+        # learned projection from the stub frontend features into d_model
+        specs["frontend_proj"] = ParamSpec(
+            (cfg.d_model, cfg.d_model), ("embed", "embed"), "fan_in", 1.0)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+def _layer_apply(x: Array, lp: Dict, cfg: ModelConfig, policy: QuantPolicy,
+                 parallel: ParallelConfig, layer_idx: int, *,
+                 positions: Array, state=None):
+    """One transformer layer. Returns (x, new_state, aux_loss)."""
+    kind = cfg.layer_kind(layer_idx)
+    aux = jnp.zeros((), jnp.float32)
+    g1 = lp.get("gamma1")
+    g2 = lp.get("gamma2")
+
+    h = apply_norm(x, lp["norm1"], cfg.norm, cfg.norm_eps)
+    new_state = state
+    if kind == "attn":
+        if state is None:
+            a = ATT.attention_block(h, lp["attn"], cfg, policy,
+                                    positions=positions,
+                                    impl=parallel.attn_impl)
+        else:
+            a, new_state = ATT.attention_decode_step(h, state, lp["attn"],
+                                                     cfg, policy)
+    elif kind == "mamba":
+        a, new_state = mamba_block(h, lp["mamba"], cfg, policy, state=state)
+    else:  # rwkv
+        a, new_state = rwkv6_block(h, lp["rwkv"], cfg, policy, state=state)
+    x = x + apply_layer_scale(g1, a)
+    x = PRM.constrain(x, ("batch", "seq", "embed"))
+
+    h2 = apply_norm(x, lp["norm2"], cfg.norm, cfg.norm_eps)
+    if kind == "rwkv":
+        cm_prev = state.cm_x_prev if state is not None else None
+        m, cm_last = rwkv_channel_mix(h2, lp["rwkv"], cfg, policy,
+                                      x_prev=cm_prev)
+        if state is not None:
+            new_state = new_state._replace(cm_x_prev=cm_last)
+    elif cfg.layer_is_moe(layer_idx):
+        m, aux = moe_block(h2, lp["moe"], cfg, policy)
+        if cfg.moe.dense_residual:
+            m = m + mlp_block(h2, lp["dense_mlp"], cfg, policy)
+    else:
+        m = mlp_block(h2, lp["mlp"], cfg, policy)
+    x = x + apply_layer_scale(g2, m)
+    x = PRM.constrain(x, ("batch", "seq", "embed"))
+    return x, new_state, aux
+
+
+def group_apply(x: Array, gp: Dict[str, Dict], cfg: ModelConfig,
+                policy: QuantPolicy, parallel: ParallelConfig, *,
+                positions: Array, states: Optional[Dict] = None):
+    """Apply one period-group (P heterogeneous layers unrolled).
+    gp: {"pos{i}": layer params (unstacked)}. Returns (x, new_states, aux)."""
+    P = period(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_states = {}
+    for i in range(P):
+        st = states.get(f"pos{i}") if states is not None else None
+        x, ns, aux = _layer_apply(x, gp[f"pos{i}"], cfg, policy, parallel, i,
+                                  positions=positions, state=st)
+        aux_total = aux_total + aux
+        if states is not None:
+            new_states[f"pos{i}"] = ns
+    return x, (new_states if states is not None else None), aux_total
+
+
+def _maybe_remat(fn, parallel: ParallelConfig):
+    if parallel.remat == "none":
+        return fn
+    if parallel.remat == "save_dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)   # "block": save only group inputs
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def embed_input(params, tokens: Array, cfg: ModelConfig,
+                policy: QuantPolicy, extra_embeds: Optional[Array] = None):
+    x = jnp.asarray(params["embed"], policy.compute_dtype)[tokens]
+    if extra_embeds is not None:
+        fe = quant_linear(extra_embeds.astype(policy.compute_dtype),
+                          PRM.use_weight(params["frontend_proj"],
+                                         ("embed", "embed"),
+                                         policy.compute_dtype), policy=policy)
+        x = jnp.concatenate([fe, x], axis=1)
+    return PRM.constrain(x, ("batch", "seq", "embed"))
+
+
+def lm_head(params, x: Array, cfg: ModelConfig, policy: QuantPolicy):
+    x = apply_norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        w = jnp.swapaxes(jnp.asarray(params["embed"], policy.compute_dtype),
+                         0, 1)
+        logits = jnp.einsum("btd,dv->btv", x, w)
+    else:
+        # head stays un-quantized: the paper quantizes transformer linears,
+        # not the (huge-vocab) classifier; also numerically sensitive.
+        logits = jnp.einsum(
+            "btd,dv->btv", x.astype(policy.compute_dtype),
+            PRM.use_weight(params["head"], ("embed", "vocab"),
+                           policy.compute_dtype))
+    # vocab gets the model axis (takes precedence over seq under SP)
+    return PRM.constrain(logits, ("batch", None, "vocab"))
+
+
+def forward(params, tokens: Array, cfg: ModelConfig, policy: QuantPolicy,
+            parallel: ParallelConfig, extra_embeds: Optional[Array] = None):
+    """Training/prefill forward. Returns (logits, aux_loss)."""
+    x = embed_input(params, tokens, cfg, policy, extra_embeds)
+    positions = jnp.arange(x.shape[1])
+    body = functools.partial(group_apply, cfg=cfg, policy=policy,
+                             parallel=parallel, positions=positions)
+
+    def group_fwd(xx, pp):
+        out, _, a = body(xx, pp)
+        return out, a
+
+    blk = _maybe_remat(group_fwd, parallel)
+
+    def scan_body(carry, gp):
+        x, aux = carry
+        x2, a = blk(x, gp)
+        return (x2, aux + a), None
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if parallel.scan_layers and n_groups(cfg) > 1:
+        (x, aux), _ = jax.lax.scan(scan_body, (x, aux0), params["blocks"])
+    else:
+        aux = aux0
+        G = n_groups(cfg)
+        for g in range(G):
+            gp = jax.tree.map(lambda p: p[g], params["blocks"])
+            x, a = blk(x, gp)
+            aux = aux + a
+    logits = lm_head(params, x, cfg, policy)
+    return logits, aux
+
+
+def loss_fn(params, batch: Dict[str, Array], cfg: ModelConfig,
+            policy: QuantPolicy, parallel: ParallelConfig,
+            aux_weight: float = 0.01):
+    logits, aux = forward(params, batch["tokens"], cfg, policy, parallel,
+                          extra_embeds=batch.get("extra_embeds"))
+    # frontend tokens (prepended) carry no next-token target
+    n_front = logits.shape[1] - batch["labels"].shape[1]
+    if n_front:
+        logits = logits[:, n_front:]
+    ce = cross_entropy_loss(logits, batch["labels"], cfg.logit_softcap)
+    return ce + aux_weight * aux, {"ce": ce, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16):
+    """Stacked-over-groups recurrent state for every position-in-period."""
+    P = period(cfg)
+    G = n_groups(cfg)
+
+    def one(i):
+        kind = cfg.layer_kind(i)
+        if kind == "attn":
+            return ATT.KVCache(
+                jnp.zeros((G, batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+                jnp.zeros((G, batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+                jnp.zeros((G,), jnp.int32))
+        if kind == "mamba":
+            d_in = cfg.mamba.expand * cfg.d_model
+            return MambaState(
+                jnp.zeros((G, batch, cfg.mamba.d_conv - 1, d_in), dtype),
+                jnp.zeros((G, batch, d_in, cfg.mamba.d_state), jnp.float32))
+        H = cfg.d_model // cfg.rwkv.head_dim
+        return RWKVState(
+            jnp.zeros((G, batch, H, cfg.rwkv.head_dim, cfg.rwkv.head_dim),
+                      jnp.float32),
+            jnp.zeros((G, batch, cfg.d_model), dtype),
+            jnp.zeros((G, batch, cfg.d_model), dtype))
+
+    return {f"pos{i}": one(i) for i in range(P)}
+
+
+def decode_state_logical_axes(cfg: ModelConfig):
+    """Logical axes for the decode state (for sharding assignment)."""
+    P = period(cfg)
+
+    def one(i):
+        kind = cfg.layer_kind(i)
+        if kind == "attn":
+            ax = ("layers", "batch", "cache_seq", "kv_heads", None)
+            return ATT.KVCache(ax, ax, ("layers",))
+        if kind == "mamba":
+            return MambaState(("layers", "batch", None, "mlp"),
+                              ("layers", "batch", "mlp", None))
+        return RWKVState(("layers", "batch", "heads", None, None),
+                         ("layers", "batch", "embed"),
+                         ("layers", "batch", "embed"))
+
+    return {f"pos{i}": one(i) for i in range(P)}
+
+
+def decode_step(params, states, tokens: Array, cfg: ModelConfig,
+                policy: QuantPolicy, parallel: ParallelConfig):
+    """One-token decode. tokens: (B, 1). Returns (logits (B,1,V), states)."""
+    x = embed_input(params, tokens, cfg, policy)
+    positions = jnp.arange(1)   # RoPE position comes from cache length inside
+    body = functools.partial(group_apply, cfg=cfg, policy=policy,
+                             parallel=parallel, positions=positions)
+
+    def scan_body(x, inp):
+        gp, st = inp
+        x2, ns, _ = body(x, gp, states=st)
+        return x2, ns
+
+    if parallel.scan_layers and n_groups(cfg) > 1:
+        x, new_states = jax.lax.scan(scan_body, x,
+                                     (params["blocks"], states))
+    else:
+        G = n_groups(cfg)
+        outs = []
+        for g in range(G):
+            gp = jax.tree.map(lambda p: p[g], params["blocks"])
+            st = jax.tree.map(lambda s: s[g], states)
+            x, ns = scan_body(x, (gp, st))
+            outs.append(ns)
+        new_states = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    logits = lm_head(params, x, cfg, policy)
+    return logits, new_states

@@ -1,0 +1,18 @@
+"""Optimizers & stabilization (paper §3)."""
+from repro.optim.base import Optimizer, default_wd_mask, global_norm  # noqa: F401
+from repro.optim.stable_adamw import stable_adamw, adamw  # noqa: F401
+from repro.optim.adafactor import adafactor  # noqa: F401
+from repro.optim.schedules import warmup_cosine, warmup_constant, beta2_warmup  # noqa: F401
+from repro.optim.grad_clip import clip_by_global_norm, clip_scalar_param  # noqa: F401
+from repro.optim.loss_scaler import (  # noqa: F401
+    FixedTensorLevelScaler, DynamicLossScaler, NoOpScaler, make_scaler)
+
+
+def make_optimizer(name: str, learning_rate, **kw) -> Optimizer:
+    if name == "stable_adamw":
+        return stable_adamw(learning_rate, **kw)
+    if name == "adamw":
+        return adamw(learning_rate, **kw)
+    if name == "adafactor":
+        return adafactor(learning_rate, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,105 @@
+"""AdaFactor (Shazeer & Stern 2018) — the paper's point of comparison.
+
+Implemented because the paper's §3.5/App. E discussion is anchored on it:
+StableAdamW ports AdaFactor's *update clipping* onto AdamW while dropping
+the pieces the community found to underperform at scale (factored second
+moment, no first moment, relative step sizes — paper App. E.1 Q&A).
+
+This implementation: factored second moment for params with ndim >= 2
+(row/col EMAs whose outer product / row-mean reconstructs û), update
+clipping with d=1, optional first moment (off by default, as in AdaFactor),
+decay ̂β₂ₜ = 1 − t^(−0.8).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import (Optimizer, Schedule, apply_skip_mask,
+                              constant_schedule, default_wd_mask)
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    moments: dict            # per-leaf: dict with vr/vc (factored) or v
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def adafactor(learning_rate: float | Schedule = 2e-3,
+              decay_pow: float = 0.8,
+              eps1: float = 1e-30,
+              clip_threshold: float = 1.0,
+              weight_decay: float = 0.2,
+              wd_mask_fn=default_wd_mask,
+              beta1: float | None = None) -> Optimizer:
+    sched = (learning_rate if callable(learning_rate)
+             else constant_schedule(learning_rate))
+
+    def init(params):
+        def leaf(p):
+            if _factored(p.shape):
+                # row EMA over last dim, col EMA over second-to-last dim
+                m = {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                     "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            else:
+                m = {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+            if beta1 is not None:
+                m["m"] = jnp.zeros_like(p, dtype=jnp.float32)
+            return m
+        return AdafactorState(jnp.zeros((), jnp.int32),
+                              jax.tree.map(leaf, params,
+                                           is_leaf=lambda x: hasattr(x, "shape")))
+
+    def update(params, state, grads, skip_mask=None):
+        t = state.step + 1
+        tf = t.astype(jnp.float32)
+        beta2t = 1.0 - tf ** (-decay_pow)
+        lr = sched(state.step)
+        wd_mask = wd_mask_fn(params)
+
+        def leaf(p, g, mom, wm):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps1
+            new_mom = {}
+            if _factored(p.shape):
+                vr = beta2t * mom["vr"] + (1 - beta2t) * jnp.mean(g2, axis=-1)
+                vc = beta2t * mom["vc"] + (1 - beta2t) * jnp.mean(g2, axis=-2)
+                new_mom["vr"], new_mom["vc"] = vr, vc
+                # û reconstruction: vr ⊗ vc / mean(vr)
+                denom = jnp.mean(vr, axis=-1, keepdims=True)
+                u_hat = (vr / jnp.maximum(denom, eps1))[..., None] * vc[..., None, :]
+            else:
+                v = beta2t * mom["v"] + (1 - beta2t) * g2
+                new_mom["v"] = v
+                u_hat = v
+            upd = gf / jnp.sqrt(jnp.maximum(u_hat, eps1))
+            # update clipping (d = clip_threshold): the piece StableAdamW ports
+            rms_u = jnp.sqrt(jnp.mean(upd * upd))
+            upd = upd / jnp.maximum(1.0, rms_u / clip_threshold)
+            if beta1 is not None:
+                m = beta1 * mom["m"] + (1 - beta1) * upd
+                new_mom["m"] = m
+                upd = m
+            pf = p.astype(jnp.float32)
+            new_p = pf - lr * weight_decay * jnp.where(wm, pf, 0.0) - lr * upd
+            return new_p.astype(p.dtype), new_mom
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.moments)
+        flat_wm = treedef.flatten_up_to(wd_mask)
+        out = [leaf(p, g, m, wm) for p, g, m, wm
+               in zip(flat_p, flat_g, flat_m, flat_wm)]
+        new_params = treedef.unflatten([o[0] for o in out])
+        new_moments = treedef.unflatten([o[1] for o in out])
+
+        new_params = apply_skip_mask(skip_mask, new_params, params)
+        new_moments = apply_skip_mask(skip_mask, new_moments, state.moments)
+        return new_params, AdafactorState(t, new_moments), {"lr": lr}
+
+    return Optimizer(init, update)

@@ -1,0 +1,61 @@
+"""Minimal self-contained optimizer protocol (no optax dependency).
+
+An Optimizer is a pair of pure functions:
+
+    state          = opt.init(params)
+    params', state', aux = opt.update(params, state, grads, skip_mask=None)
+
+* ``params`` are the f32 master weights.
+* ``skip_mask`` is an optional pytree of per-tensor booleans (True = skip
+  this tensor's update this step) — the hook used by the paper's §3.6
+  tensor-level loss scaler: an Inf/NaN in one tensor skips only that
+  tensor, not the whole network.
+* ``aux`` is a dict of diagnostics (per-tensor RMS_t for the stability
+  monitor, the global lr actually applied, etc.).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+OptState = Any
+Schedule = Callable[[jax.Array], jax.Array]   # step -> lr
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Params], OptState]
+    update: Callable[..., tuple]   # (params, state, grads, skip_mask=None)
+
+
+def default_wd_mask(params: Params) -> Params:
+    """Decay only matrices (ndim >= 2); biases, norm gains, layer-scale
+    vectors and scalars (e.g. logit_scale) are excluded — OpenCLIP default."""
+    return jax.tree.map(lambda p: jnp.ndim(p) >= 2, params)
+
+
+def constant_schedule(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def apply_skip_mask(skip, new, old):
+    """Per-tensor conditional update: where skip is True keep ``old``."""
+    if skip is None:
+        return new
+    return jax.tree.map(
+        lambda s, n, o: jnp.where(s, o, n), skip, new, old)
+
+
+def tree_finite_mask(tree) -> Any:
+    """Per-tensor 'all finite' predicate (False => Inf/NaN present)."""
+    return jax.tree.map(lambda g: jnp.all(jnp.isfinite(
+        g.astype(jnp.float32))), tree)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))

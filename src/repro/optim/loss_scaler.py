@@ -1,0 +1,137 @@
+"""Loss scaling for fp16 training (paper §2.1 and §3.6).
+
+Two scalers:
+
+* ``DynamicLossScaler`` — the PyTorch default the paper critiques: global
+  Inf/NaN check, *whole-network* update skip, halve scale on overflow,
+  double after ``growth_interval`` clean steps. Init 65536. The paper shows
+  transient gradient spikes make this drop the scale "many times" and take
+  thousands of iterations to recover (§3.6, Fig. 11).
+
+* ``FixedTensorLevelScaler`` — the paper's recommendation: (i) Inf/NaN is
+  checked *per tensor* and only that tensor's update is skipped (in
+  practice this recovers Chen et al.'s freeze-the-patch-embedding trick,
+  since that is where the Inf/NaNs occur), and (ii) the scale stays fixed
+  at its initial value. This enabled fp16 ViT-Huge CLIP training where the
+  dynamic scaler diverged [Cherti et al.].
+
+Both are jit-compatible pytree states. Usage:
+
+    scaled_loss = scaler.scale(loss, state)
+    grads       = jax.grad(...)                      # grads of scaled loss
+    grads, skip_mask, state, stats = scaler.unscale(grads, state)
+    params, opt_state, _ = opt.update(params, opt_state, grads,
+                                      skip_mask=skip_mask)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import tree_finite_mask
+
+
+class ScalerState(NamedTuple):
+    scale: jax.Array          # f32 scalar
+    good_steps: jax.Array     # int32, consecutive overflow-free steps
+
+
+class FixedTensorLevelScaler:
+    """Paper §3.6: fixed scale + tensor-level skip."""
+
+    def __init__(self, init_scale: float = 65536.0):
+        self.init_scale = init_scale
+
+    def init(self) -> ScalerState:
+        return ScalerState(jnp.asarray(self.init_scale, jnp.float32),
+                           jnp.zeros((), jnp.int32))
+
+    def scale(self, loss, state: ScalerState):
+        return loss * state.scale.astype(loss.dtype)
+
+    def unscale(self, grads, state: ScalerState):
+        finite = tree_finite_mask(grads)
+        skip_mask = jax.tree.map(lambda f: jnp.logical_not(f), finite)
+        inv = 1.0 / state.scale
+        grads = jax.tree.map(
+            lambda g, f: jnp.where(f, g.astype(jnp.float32) * inv, 0.0),
+            grads, finite)
+        n_skipped = jnp.sum(jnp.stack(
+            [jnp.asarray(s, jnp.int32) for s in jax.tree.leaves(skip_mask)]))
+        # scale never changes; good_steps kept for symmetric logging
+        new_state = ScalerState(state.scale, state.good_steps + 1)
+        return grads, skip_mask, new_state, {"n_skipped_tensors": n_skipped,
+                                             "loss_scale": state.scale}
+
+
+class DynamicLossScaler:
+    """PyTorch-default dynamic scaler (global skip) — baseline."""
+
+    def __init__(self, init_scale: float = 65536.0, growth_interval: int = 2000,
+                 growth_factor: float = 2.0, backoff_factor: float = 0.5,
+                 max_scale: float = 2.0 ** 24):
+        self.init_scale = init_scale
+        self.growth_interval = growth_interval
+        self.growth_factor = growth_factor
+        self.backoff_factor = backoff_factor
+        self.max_scale = max_scale
+
+    def init(self) -> ScalerState:
+        return ScalerState(jnp.asarray(self.init_scale, jnp.float32),
+                           jnp.zeros((), jnp.int32))
+
+    def scale(self, loss, state: ScalerState):
+        return loss * state.scale.astype(loss.dtype)
+
+    def unscale(self, grads, state: ScalerState):
+        finite = tree_finite_mask(grads)
+        all_finite = jnp.all(jnp.stack(jax.tree.leaves(finite)))
+        inv = 1.0 / state.scale
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) * inv, grads)
+        # global skip: every tensor skipped if ANY overflowed
+        skip_mask = jax.tree.map(lambda g: jnp.logical_not(all_finite), grads)
+        good = jnp.where(all_finite, state.good_steps + 1, 0)
+        grew = good >= self.growth_interval
+        new_scale = jnp.where(
+            all_finite,
+            jnp.where(grew, jnp.minimum(state.scale * self.growth_factor,
+                                        self.max_scale), state.scale),
+            state.scale * self.backoff_factor)
+        good = jnp.where(grew, 0, good)
+        return grads, skip_mask, ScalerState(new_scale, good), {
+            "n_skipped_tensors": jnp.where(all_finite, 0, 1),
+            "loss_scale": new_scale}
+
+
+class NoOpScaler:
+    """bf16/fp32 path: no scaling, still reports per-tensor finiteness so
+    NaN-producing steps are skipped per tensor (cheap insurance)."""
+
+    def init(self) -> ScalerState:
+        return ScalerState(jnp.ones((), jnp.float32), jnp.zeros((), jnp.int32))
+
+    def scale(self, loss, state):
+        return loss
+
+    def unscale(self, grads, state):
+        finite = tree_finite_mask(grads)
+        skip_mask = jax.tree.map(lambda f: jnp.logical_not(f), finite)
+        grads = jax.tree.map(
+            lambda g, f: jnp.where(f, g.astype(jnp.float32), 0.0),
+            grads, finite)
+        n_skipped = jnp.sum(jnp.stack(
+            [jnp.asarray(s, jnp.int32) for s in jax.tree.leaves(skip_mask)]))
+        return grads, skip_mask, state, {"n_skipped_tensors": n_skipped,
+                                         "loss_scale": state.scale}
+
+
+def make_scaler(kind: str):
+    if kind == "fixed_tensor":
+        return FixedTensorLevelScaler()
+    if kind == "dynamic":
+        return DynamicLossScaler()
+    if kind == "none":
+        return NoOpScaler()
+    raise ValueError(f"unknown scaler {kind!r}")

@@ -1,0 +1,36 @@
+"""LR schedules. The paper's recipe: linear warmup (5k of 20k iterations)
+then cosine decay (§2.2.2 / §3.2)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_lr: float = 0.0):
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(1.0, warmup_steps)
+        prog = (step - warmup_steps) / jnp.maximum(
+            1.0, total_steps - warmup_steps)
+        prog = jnp.clip(prog, 0.0, 1.0)
+        cos = final_lr + 0.5 * (peak_lr - final_lr) * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return sched
+
+
+def warmup_constant(peak_lr: float, warmup_steps: int):
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(1.0, warmup_steps)
+        return jnp.where(step < warmup_steps, warm, peak_lr)
+    return sched
+
+
+def beta2_warmup(lam: float = 0.5):
+    """AdaFactor/PaLM-style β₂ schedule: β₂(t) = 1 − t^(−λ). The paper tried
+    λ ∈ {0.45, 0.5, 0.65} and found it does NOT help (Fig. 15) — included so
+    the benchmark can reproduce that negative result."""
+    def sched(step):
+        t = jnp.maximum(jnp.asarray(step, jnp.float32), 1.0)
+        return 1.0 - t ** (-lam)
+    return sched

@@ -1,0 +1,111 @@
+"""StableAdamW — AdamW with AdaFactor update clipping (paper Algorithm 2).
+
+The failure mode it fixes (paper §3.4, the "stuck-in-the-past" scenario):
+when the learning signal shifts, the second-moment EMA ``u_t`` underestimates
+the incoming squared gradients; the per-parameter step ``v/ (sqrt(u)+eps)``
+then becomes catastrophically large and the loss spikes 1-8 iterations later
+(paper Fig. 9, App. D: 28/30 loss spikes preceded by an RMS spike in the
+patch-embedding layer).
+
+The fix (from AdaFactor §5, ported onto AdamW): measure
+
+    RMS_t = sqrt( mean( g_t² / max(u_t, eps²) ) )        (per tensor)
+
+and divide the learning rate by max(1, RMS_t) — "update clipping" with d=1.
+When u_t is healthy RMS≈1 and nothing changes; when u_t is stale RMS≫1 and
+the step is automatically damped.
+
+Faithfulness notes:
+* β̂ correction applied to the *betas* (AdaFactor §7.1 form), equivalent to
+  the usual v̂/û debiasing — paper footnote 2.
+* RMS computed per tensor ("independently for each tensor", §3.5).
+* ε inside the max is squared: max(u, ε²), ε = 1e-6 (paper App. E.2).
+* Weight decay is multiplied by the *clipped* η_t (Algorithm 2 line:
+  θ ← θ − η_t λ θ − η_t v/(√u+ε)).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import (Optimizer, Schedule, apply_skip_mask,
+                              constant_schedule, default_wd_mask)
+
+
+class StableAdamWState(NamedTuple):
+    step: jax.Array          # scalar int32
+    exp_avg: dict            # v_t (first moment)
+    exp_avg_sq: dict         # u_t (second moment)
+
+
+def stable_adamw(learning_rate: float | Schedule = 2e-3,
+                 beta1: float = 0.9,
+                 beta2: float = 0.95,
+                 eps: float = 1e-6,
+                 weight_decay: float = 0.2,
+                 wd_mask_fn: Callable = default_wd_mask,
+                 clipping: bool = True) -> Optimizer:
+    """Algorithm 2. ``clipping=False`` degrades to plain AdamW with the same
+    β̂ debiasing (used as the paper's unstable baseline in benchmarks).
+
+    Paper defaults for CLIP: lr 2e-3 (5k warmup + cosine), wd 0.2,
+    β2 ∈ {0.95 … 0.999} swept in Figures 6-10.
+    """
+    sched = (learning_rate if callable(learning_rate)
+             else constant_schedule(learning_rate))
+
+    def init(params):
+        zeros = lambda: jax.tree.map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return StableAdamWState(jnp.zeros((), jnp.int32), zeros(), zeros())
+
+    def update(params, state, grads, skip_mask=None):
+        t = state.step + 1
+        tf = t.astype(jnp.float32)
+        # β̂ debiasing on the betas (AdaFactor §7.1 / paper footnote 2)
+        b1t = beta1 * (1.0 - beta1 ** (tf - 1.0)) / (1.0 - beta1 ** tf)
+        b2t = beta2 * (1.0 - beta2 ** (tf - 1.0)) / (1.0 - beta2 ** tf)
+
+        gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        v = jax.tree.map(lambda m, g: b1t * m + (1.0 - b1t) * g,
+                         state.exp_avg, gf)
+        u = jax.tree.map(lambda s, g: b2t * s + (1.0 - b2t) * g * g,
+                         state.exp_avg_sq, gf)
+
+        # per-tensor RMS_t = sqrt(mean(g²/max(u, ε²)))  — the spike signal
+        rms = jax.tree.map(
+            lambda g, uu: jnp.sqrt(jnp.mean(
+                g * g / jnp.maximum(uu, eps * eps))), gf, u)
+
+        lr = sched(state.step)
+        wd_mask = wd_mask_fn(params)
+
+        def step_fn(p, vv, uu, r, wm):
+            eta = lr / jnp.maximum(1.0, r) if clipping else lr
+            upd = vv / (jnp.sqrt(uu) + eps)
+            pf = p.astype(jnp.float32)
+            new = pf - eta * weight_decay * jnp.where(wm, pf, 0.0) - eta * upd
+            return new.astype(p.dtype)
+
+        new_params = jax.tree.map(step_fn, params, v, u, rms, wd_mask)
+
+        # §3.6 tensor-level skip: a skipped tensor keeps params AND moments
+        new_params = apply_skip_mask(skip_mask, new_params, params)
+        v = apply_skip_mask(skip_mask, v, state.exp_avg)
+        u = apply_skip_mask(skip_mask, u, state.exp_avg_sq)
+
+        aux = {"rms": rms, "lr": lr}
+        return new_params, StableAdamWState(t, v, u), aux
+
+    return Optimizer(init, update)
+
+
+def adamw(learning_rate=2e-3, beta1=0.9, beta2=0.999, eps=1e-8,
+          weight_decay=0.2, wd_mask_fn=default_wd_mask) -> Optimizer:
+    """Plain AdamW (PyTorch-default β2=0.999) — the paper's unstable
+    baseline. Shares the StableAdamW code path with clipping off but keeps
+    the conventional ε placement (outside the max)."""
+    return stable_adamw(learning_rate, beta1, beta2, eps, weight_decay,
+                        wd_mask_fn, clipping=False)

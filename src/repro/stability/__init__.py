@@ -1,0 +1,4 @@
+from repro.stability.rms_monitor import RMSMonitor, RMS_SPIKE_THRESHOLD  # noqa: F401
+from repro.stability.spike_detector import LossSpikeDetector  # noqa: F401
+from repro.stability.feature_stats import (  # noqa: F401
+    block_feature_magnitude, gradient_stats)

@@ -1,0 +1,25 @@
+"""Feature-magnitude tracking (paper Figure 5-right / Figure 14).
+
+The paper measures E[|x_k|] — the mean absolute activation of each
+transformer block's output — showing that without zero-init layer-scale the
+magnitude grows with depth, which breaks tensor-wise fp8. Models in this
+framework optionally return per-block magnitudes through this collector.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_feature_magnitude(x: jax.Array) -> jax.Array:
+    """E[abs(x_k)] for one block output, f32 scalar."""
+    return jnp.mean(jnp.abs(x.astype(jnp.float32)))
+
+
+def gradient_stats(grads) -> dict:
+    """mean/max |g| per tensor (paper Fig. 14 left) + global Inf/NaN count."""
+    def leaf(g):
+        gf = jnp.abs(g.astype(jnp.float32))
+        return {"mean": jnp.mean(gf), "max": jnp.max(gf),
+                "nonfinite": jnp.sum(~jnp.isfinite(g.astype(jnp.float32)))}
+    return jax.tree.map(leaf, grads)

@@ -1,0 +1,62 @@
+"""Loss-spike detection heuristic (paper Appendix D).
+
+A loss spike event is a step where the loss exceeds the running mean by
+3.2 running standard deviations, with: (i) the first 1000 iterations
+ignored (low lr), (ii) events deduplicated within 10 iterations (earliest
+kept), and (iii) an event only counts if multiple deviations occur within
+an interval of 10 ("indicates that loss has meaningfully spiked").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List
+
+import numpy as np
+
+from repro.stability.rms_monitor import _dedup_events
+
+
+@dataclass
+class LossSpikeDetector:
+    z_threshold: float = 3.2
+    ignore_first: int = 1000
+    dedup_window: int = 10
+    min_deviations_in_window: int = 2
+    ema_alpha: float = 0.02       # running-mean horizon ≈ 50 steps
+    min_history: int = 20         # steps of stats before detection starts
+
+    steps: List[int] = field(default_factory=list)
+    losses: List[float] = field(default_factory=list)
+
+    def record(self, step: int, loss: float):
+        self.steps.append(int(step))
+        self.losses.append(float(loss))
+
+    def spike_steps(self) -> List[int]:
+        if len(self.losses) < 10:
+            return []
+        losses = np.asarray(self.losses)
+        steps = np.asarray(self.steps)
+        mean = losses[0]
+        var = 0.0
+        deviations = []
+        a = self.ema_alpha
+        for i, l in enumerate(losses):
+            std = np.sqrt(max(var, 1e-12))
+            if (steps[i] >= self.ignore_first and i >= self.min_history
+                    and l > mean + self.z_threshold * std and std > 0):
+                deviations.append(int(steps[i]))
+            else:
+                # only update the running stats on non-deviant steps so a
+                # spike does not inflate its own baseline
+                mean = (1 - a) * mean + a * l
+                var = (1 - a) * var + a * (l - mean) ** 2
+                continue
+            mean = (1 - a) * mean + a * l
+            var = (1 - a) * var + a * (l - mean) ** 2
+        # require >= min_deviations within dedup_window (App. D)
+        confirmed = [s for s in deviations
+                     if sum(1 for d in deviations
+                            if abs(d - s) <= self.dedup_window)
+                     >= self.min_deviations_in_window]
+        return _dedup_events(confirmed, window=self.dedup_window)

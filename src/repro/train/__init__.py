@@ -1,0 +1,4 @@
+from repro.train.train_step import (  # noqa: F401
+    TrainState, init_train_state, make_train_setup, make_train_step,
+    make_eval_step)
+from repro.train.trainer import Trainer, TrainerHooks  # noqa: F401

@@ -1,0 +1,110 @@
+"""Host training loop with the full fault-tolerance story:
+
+  * auto-resume from the latest checkpoint (deterministic data resume —
+    the pipeline is a pure function of step),
+  * async rotating checkpoints (atomic renames),
+  * straggler watchdog (per-step EMA timing; slow steps logged and can
+    trigger an early checkpoint),
+  * stability monitoring: per-tensor RMS_t recording + loss-spike detection
+    (paper §3.4 / App. D) with the RMS→loss-spike predictive analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.distributed.straggler import StragglerWatchdog
+from repro.stability import LossSpikeDetector, RMSMonitor
+from repro.train.train_step import TrainState
+
+
+@dataclasses.dataclass
+class TrainerHooks:
+    on_step: Optional[Callable[[int, Dict], None]] = None
+    on_checkpoint: Optional[Callable[[int], None]] = None
+    on_spike: Optional[Callable[[int], None]] = None
+
+
+class Trainer:
+    def __init__(self, train_step_fn: Callable, state: TrainState, *,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 0, keep_checkpoints: int = 3,
+                 watch_layers=("patch_embed", "embed"),
+                 hooks: Optional[TrainerHooks] = None,
+                 log_every: int = 10):
+        self.step_fn = train_step_fn
+        self.state = state
+        self.ckpt = (CheckpointManager(checkpoint_dir, keep_checkpoints)
+                     if checkpoint_dir else None)
+        self.checkpoint_every = checkpoint_every
+        self.watchdog = StragglerWatchdog()
+        self.rms_monitor = RMSMonitor(watch_layers=watch_layers)
+        self.spike_detector = LossSpikeDetector(ignore_first=0)
+        self.hooks = hooks or TrainerHooks()
+        self.log_every = log_every
+        self.history: List[Dict] = []
+
+    # ------------------------------------------------------------------
+    def maybe_resume(self) -> int:
+        """Restore the latest checkpoint if one exists. Returns start step."""
+        if self.ckpt is None or self.ckpt.latest_step() is None:
+            return int(self.state.step)
+        tree, step, extra = self.ckpt.restore(like=self.state)
+        self.state = jax.tree.map(
+            lambda ref, arr: jax.device_put(np.asarray(arr)).astype(ref.dtype)
+            if hasattr(ref, "dtype") else arr, self.state,
+            TrainState(*tree) if isinstance(tree, (list, tuple)) else tree)
+        return step
+
+    # ------------------------------------------------------------------
+    def run(self, batch_iter, n_steps: int) -> List[Dict]:
+        start = int(self.state.step)
+        for i in range(start, start + n_steps):
+            self.watchdog.step_start()
+            step_idx, batch = next(batch_iter) if hasattr(
+                batch_iter, "__next__") else (i, batch_iter(i))
+            self.state, metrics = self.step_fn(self.state, batch)
+            loss = float(metrics["loss"])
+            timing = self.watchdog.step_end(i)
+
+            # stability bookkeeping (host side, cheap)
+            self.spike_detector.record(i, loss)
+            if "rms" in metrics:
+                self.rms_monitor.record(i, jax.tree.map(
+                    lambda x: np.asarray(x), metrics["rms"]))
+
+            rec = {"step": i, "loss": loss,
+                   "grad_norm": float(metrics["grad_norm"]),
+                   "lr": float(metrics["lr"]),
+                   "n_skipped": int(metrics["n_skipped_tensors"]),
+                   "dt": timing["dt"], "slow": timing["slow"]}
+            self.history.append(rec)
+            if self.hooks.on_step:
+                self.hooks.on_step(i, rec)
+            if self.log_every and i % self.log_every == 0:
+                print(f"[trainer] step {i} loss {loss:.4f} "
+                      f"gnorm {rec['grad_norm']:.3f} dt {timing['dt']*1e3:.0f}ms"
+                      + (" SLOW" if timing["slow"] else ""))
+
+            if (self.ckpt is not None and self.checkpoint_every
+                    and (i + 1) % self.checkpoint_every == 0):
+                self.ckpt.save_async(i + 1, self.state)
+                if self.hooks.on_checkpoint:
+                    self.hooks.on_checkpoint(i + 1)
+        if self.ckpt is not None:
+            self.ckpt.wait()
+        return self.history
+
+    # ------------------------------------------------------------------
+    def stability_report(self, layer: Optional[str] = None) -> Dict:
+        spikes = self.spike_detector.spike_steps()
+        report: Dict[str, Any] = {"loss_spike_steps": spikes}
+        layers = ([layer] if layer else self.rms_monitor.layers())
+        for name in layers:
+            report[name] = self.rms_monitor.predicts_loss_spike(name, spikes)
+        return report

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Tests see exactly ONE device (the dry-run sets its own 512-device flag in
+# a subprocess). Do not set xla_force_host_platform_device_count here.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

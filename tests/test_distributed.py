@@ -1,0 +1,172 @@
+"""Units for the distributed substrate: HLO collective parsing, the
+roofline model, sharding rules, grouped-MoE equivalence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.hlo_analysis import (collective_summary,
+                                            count_dot_flops_by_dtype,
+                                            parse_collectives)
+from repro.distributed.roofline import (RooflineCell, model_flops,
+                                        PEAK_BF16, PEAK_INT8)
+
+
+HLO_SAMPLE = """
+HloModule test
+fused {
+  %p = bf16[128,256]{1,0} parameter(0)
+}
+ENTRY main {
+  %a = bf16[128,256]{1,0} parameter(0)
+  %ag = bf16[2048,256]{1,0} all-gather(%a), replica_groups=[16,16]<=[256], dimensions={0}
+  %ar = f32[512,512]{1,0} all-reduce(%b), replica_groups={{0,1,2,3}}, to_apply=%add
+  %rs = bf16[64,256]{1,0} reduce-scatter(%c), replica_groups=[32,8]<=[256], dimensions={0}
+  %cp = bf16[8,128]{1,0} collective-permute(%d), source_target_pairs={{0,1}}
+  %w = s8[64,128]{1,0} parameter(1)
+  %x = s8[32,64]{1,0} parameter(2)
+  %dot1 = s32[32,128]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %y = bf16[32,64]{1,0} parameter(3)
+  %z = bf16[64,16]{1,0} parameter(4)
+  %dot2 = f32[32,16]{1,0} dot(%y, %z), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+class TestHLOParsing:
+    def test_parse_collectives_kinds_and_groups(self):
+        ops = parse_collectives(HLO_SAMPLE, 256)
+        kinds = sorted(o.kind for o in ops)
+        assert kinds == ["all-gather", "all-reduce", "collective-permute",
+                         "reduce-scatter"]
+        ag = next(o for o in ops if o.kind == "all-gather")
+        assert ag.group_size == 16
+        assert ag.bytes == 2048 * 256 * 2
+        ar = next(o for o in ops if o.kind == "all-reduce")
+        assert ar.group_size == 4
+        assert ar.bytes == 512 * 512 * 4
+
+    def test_wire_byte_factors(self):
+        ops = {o.kind: o for o in parse_collectives(HLO_SAMPLE, 256)}
+        ag = ops["all-gather"]
+        np.testing.assert_allclose(ag.wire_bytes_per_device,
+                                   (15 / 16) * ag.bytes)
+        ar = ops["all-reduce"]
+        np.testing.assert_allclose(ar.wire_bytes_per_device,
+                                   2 * (3 / 4) * ar.bytes)
+        cp = ops["collective-permute"]
+        np.testing.assert_allclose(cp.wire_bytes_per_device, cp.bytes)
+
+    def test_dot_flops_classification(self):
+        d = count_dot_flops_by_dtype(HLO_SAMPLE)
+        assert d["int8"] == 2 * 32 * 64 * 128      # s32 result => int8 dot
+        assert d["other"] == 2 * 32 * 64 * 16
+
+    def test_summary_totals(self):
+        s = collective_summary(HLO_SAMPLE, 256)
+        assert s["n_ops"] == 4
+        assert s["wire_bytes_per_device"] > 0
+
+
+class TestRooflineModel:
+    def _cell(self, **kw):
+        base = dict(arch="a", shape="train_4k", mesh="16x16", n_devices=256,
+                    flops_int8=0.0, flops_other=197e12, bytes_accessed=819e9,
+                    wire_bytes=50e9, model_flops_global=197e12 * 256)
+        base.update(kw)
+        return RooflineCell(**base)
+
+    def test_terms_are_seconds(self):
+        c = self._cell()
+        assert c.t_compute == pytest.approx(1.0)
+        assert c.t_memory == pytest.approx(1.0)
+        assert c.t_collective == pytest.approx(1.0)
+
+    def test_int8_credited_at_2x(self):
+        c = self._cell(flops_other=0.0, flops_int8=PEAK_INT8)
+        assert c.t_compute == pytest.approx(1.0)
+        c2 = self._cell(flops_other=0.0, flops_int8=PEAK_BF16)
+        assert c2.t_compute == pytest.approx(0.5)
+
+    def test_bottleneck_and_fraction(self):
+        c = self._cell(wire_bytes=500e9)
+        assert c.bottleneck == "collective"
+        assert c.roofline_fraction == pytest.approx(0.1)
+        assert c.useful_ratio == pytest.approx(1.0)
+
+    def test_model_flops_rule(self):
+        assert model_flops(1e9, 1e6, "train") == 6e15
+        assert model_flops(1e9, 1e6, "infer") == 2e15
+
+
+class TestShardingRules:
+    def test_pure_dp_folds_model_axis(self):
+        from repro.configs.base import ParallelConfig
+        from repro.models.params import default_rules
+        par = ParallelConfig(pure_dp=True, fsdp=True)
+        r = default_rules(par)
+        assert r["heads"] is None and r["mlp"] is None
+        assert r["batch"] == ("data", "model")
+        assert r["embed"] == ("data",)
+
+    def test_kv_head_replication_flag(self):
+        from repro.configs.base import ParallelConfig
+        from repro.models.params import default_rules
+        assert default_rules(ParallelConfig())["kv_heads"] == "model"
+        assert default_rules(
+            ParallelConfig(shard_kv_heads=False))["kv_heads"] is None
+
+    def test_duplicate_axis_dedup(self):
+        from repro.models.params import logical_to_pspec
+        rules = {"batch": ("data", "model"), "embed": "data"}
+        ps = logical_to_pspec(("batch", "seq", "embed"), rules)
+        # embed must NOT re-use 'data' (already claimed by batch)
+        assert tuple(ps) == (("data", "model"), None, None)
+
+
+class TestGroupedMoE:
+    def test_grouped_equals_flat_when_capacity_ample(self):
+        """With capacity factor high enough that nothing is dropped, the
+        grouped dispatch (G groups) must equal the G=1 result exactly —
+        grouping only changes locality, not semantics."""
+        import repro.models.moe as MOE
+        from repro.configs import get_reduced_config
+        from repro.core.precision import QuantPolicy
+        from repro.models import build
+        from repro.models.params import init_params
+
+        cfg0 = get_reduced_config("qwen3-moe-30b-a3b")
+        cfg = dataclasses.replace(
+            cfg0, moe=dataclasses.replace(cfg0.moe, capacity_factor=8.0))
+        params = init_params(build(cfg).param_specs, jax.random.PRNGKey(0))
+        lp = jax.tree.map(lambda p: p[0], params["blocks"]["pos0"])
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, cfg.d_model),
+                              jnp.float32)
+        pol = QuantPolicy("bf16", compute_dtype=jnp.float32)
+
+        orig = MOE._data_group_count
+        try:
+            MOE._data_group_count = lambda T: 1
+            y1, aux1 = MOE.moe_block(x, lp["moe"], cfg, pol)
+            MOE._data_group_count = lambda T: 4
+            y4, aux4 = MOE.moe_block(x, lp["moe"], cfg, pol)
+        finally:
+            MOE._data_group_count = orig
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y4),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(float(aux1), float(aux4), rtol=1e-5)
+
+    def test_capacity_drops_respect_group_budget(self):
+        """Adversarial routing: all tokens to one expert — kept tokens per
+        group must equal exactly C (the rest dropped)."""
+        from repro.models.moe import _group_dispatch
+        Tg, d, E, C, k = 64, 8, 4, 8, 1
+        xg = jnp.ones((Tg, d))
+        gates = jnp.ones((Tg, k))
+        experts = jnp.zeros((Tg, k), jnp.int32)       # everyone -> expert 0
+        x_disp, slot_token, slot_w = _group_dispatch(xg, gates, experts,
+                                                     E=E, C=C)
+        assert int(jnp.sum(slot_w > 0)) == C
+        assert x_disp.shape == (E, C, d)

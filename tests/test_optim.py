@@ -1,0 +1,172 @@
+"""StableAdamW (Algorithm 2), baselines, loss scalers, schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (adafactor, adamw, beta2_warmup, clip_by_global_norm,
+                         make_scaler, stable_adamw, warmup_cosine)
+
+key = jax.random.PRNGKey(0)
+
+
+def quadratic(params, target):
+    return jnp.mean((params["w"] - target) ** 2)
+
+
+class TestStableAdamW:
+    def test_converges(self):
+        target = jax.random.normal(key, (16, 8))
+        opt = stable_adamw(0.1, beta2=0.95, weight_decay=0.0)
+        p = {"w": jnp.zeros((16, 8))}
+        st_ = opt.init(p)
+        for _ in range(300):
+            g = jax.grad(quadratic)(p, target)
+            p, st_, _ = opt.update(p, st_, g)
+        assert float(quadratic(p, target)) < 1e-4
+
+    def test_update_clipping_caps_stale_moment_step(self):
+        """The stuck-in-the-past scenario (paper §3.4): tiny grads for 100
+        steps then a huge one. Clipped step must be ≈lr; unclipped ≈lr/√u≫lr."""
+        opt_c = stable_adamw(1.0, beta2=0.999, weight_decay=0.0)
+        opt_u = stable_adamw(1.0, beta2=0.999, weight_decay=0.0,
+                             clipping=False)
+        p = {"w": jnp.zeros((4,))}
+        st_ = opt_c.init(p)
+        for _ in range(100):
+            p, st_, _ = opt_c.update(p, st_, {"w": jnp.full((4,), 1e-8)})
+        before = p["w"]
+        p_c, _, aux = opt_c.update(p, st_, {"w": jnp.ones((4,))})
+        p_u, _, _ = opt_u.update(p, st_, {"w": jnp.ones((4,))})
+        step_c = float(jnp.max(jnp.abs(p_c["w"] - before)))
+        step_u = float(jnp.max(jnp.abs(p_u["w"] - before)))
+        assert step_c <= 1.05              # η = lr/max(1, RMS)
+        assert step_u > 5 * step_c
+        assert float(aux["rms"]["w"]) > 2.3   # would register as RMS spike
+
+    def test_rms_is_one_for_steady_gradients(self):
+        """With constant gradients u_t tracks g² and RMS_t → ~1."""
+        opt = stable_adamw(1e-3, beta2=0.9, weight_decay=0.0)
+        p = {"w": jnp.ones((8,))}
+        st_ = opt.init(p)
+        for _ in range(50):
+            p, st_, aux = opt.update(p, st_, {"w": jnp.full((8,), 0.5)})
+        assert abs(float(aux["rms"]["w"]) - 1.0) < 0.1
+
+    def test_beta_hat_debias_first_step(self):
+        """At t=1, β̂=0 ⇒ v₁ = g₁ exactly (Algorithm 2 debiasing)."""
+        opt = stable_adamw(0.0, beta1=0.9, beta2=0.99, weight_decay=0.0)
+        p = {"w": jnp.zeros((3,))}
+        st_ = opt.init(p)
+        g = {"w": jnp.array([1.0, -2.0, 3.0])}
+        _, st_, _ = opt.update(p, st_, g)
+        np.testing.assert_allclose(np.asarray(st_.exp_avg["w"]),
+                                   [1.0, -2.0, 3.0], rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(st_.exp_avg_sq["w"]),
+                                   [1.0, 4.0, 9.0], rtol=1e-6)
+
+    def test_weight_decay_mask_excludes_vectors(self):
+        opt = stable_adamw(0.1, weight_decay=1.0)
+        p = {"mat": jnp.ones((4, 4)), "vec": jnp.ones((4,))}
+        st_ = opt.init(p)
+        g = jax.tree.map(jnp.zeros_like, p)
+        p2, _, _ = opt.update(p, st_, g)
+        assert float(jnp.max(jnp.abs(p2["vec"] - 1.0))) < 1e-6   # no decay
+        assert float(jnp.max(p2["mat"])) < 1.0                   # decayed
+
+    def test_skip_mask_freezes_tensor_and_moments(self):
+        opt = stable_adamw(0.1)
+        p = {"a": jnp.ones((4,)), "b": jnp.ones((4,))}
+        st_ = opt.init(p)
+        g = {"a": jnp.ones((4,)), "b": jnp.ones((4,))}
+        skip = {"a": jnp.asarray(True), "b": jnp.asarray(False)}
+        p2, st2, _ = opt.update(p, st_, g, skip_mask=skip)
+        np.testing.assert_array_equal(np.asarray(p2["a"]), np.asarray(p["a"]))
+        assert float(jnp.max(jnp.abs(st2.exp_avg["a"]))) == 0.0
+        assert float(jnp.max(jnp.abs(p2["b"] - p["b"]))) > 0
+
+
+class TestBaselines:
+    def test_adamw_converges(self):
+        target = jax.random.normal(key, (8, 4))
+        opt = adamw(0.05, weight_decay=0.0)
+        p = {"w": jnp.zeros((8, 4))}
+        st_ = opt.init(p)
+        for _ in range(400):
+            p, st_, _ = opt.update(p, st_, jax.grad(quadratic)(p, target))
+        assert float(quadratic(p, target)) < 1e-3
+
+    def test_adafactor_factored_memory(self):
+        """Factored second moment stores O(n+m), not O(n·m)."""
+        opt = adafactor(0.01)
+        p = {"w": jnp.zeros((64, 32))}
+        st_ = opt.init(p)
+        n_state = sum(x.size for x in jax.tree.leaves(st_.moments))
+        assert n_state == 64 + 32
+
+    def test_adafactor_converges(self):
+        target = jax.random.normal(key, (16, 8))
+        opt = adafactor(0.05, weight_decay=0.0)
+        p = {"w": jnp.zeros((16, 8))}
+        st_ = opt.init(p)
+        for _ in range(500):
+            p, st_, _ = opt.update(p, st_, jax.grad(quadratic)(p, target))
+        assert float(quadratic(p, target)) < 2e-2
+
+
+class TestLossScalers:
+    def test_fixed_tensor_level_skips_only_bad_tensor(self):
+        sc = make_scaler("fixed_tensor")
+        s = sc.init()
+        grads = {"good": jnp.ones((3,)) * 2.0,
+                 "bad": jnp.array([jnp.inf, 1.0])}
+        g, skip, s2, stats = sc.unscale(grads, s)
+        assert not bool(skip["good"]) and bool(skip["bad"])
+        assert float(s2.scale) == float(s.scale)       # never decays
+        np.testing.assert_allclose(np.asarray(g["good"]),
+                                   2.0 / 65536.0, rtol=1e-6)
+
+    def test_dynamic_scaler_backoff_and_growth(self):
+        sc = make_scaler("dynamic")
+        s = sc.init()
+        g, skip, s2, _ = sc.unscale({"a": jnp.array([jnp.nan])}, s)
+        assert float(s2.scale) == 32768.0               # halved
+        assert bool(skip["a"])                          # global skip
+        s3 = s2
+        for _ in range(sc.growth_interval):
+            _, _, s3, _ = sc.unscale({"a": jnp.ones((1,))}, s3)
+        assert float(s3.scale) == 65536.0               # doubled back
+
+    def test_fp16_overflow_end_to_end(self):
+        """fp16 forward that overflows produces Inf grads in exactly one
+        tensor; fixed_tensor scaler must skip only that tensor."""
+        sc = make_scaler("fixed_tensor")
+        s = sc.init()
+        grads = {"w1": jnp.asarray([6e4], jnp.float16) * 2,   # inf in fp16
+                 "w2": jnp.ones((2,), jnp.float16)}
+        g, skip, s2, stats = sc.unscale(grads, s)
+        assert bool(skip["w1"]) and not bool(skip["w2"])
+        assert int(stats["n_skipped_tensors"]) == 1
+
+
+class TestSchedules:
+    def test_warmup_cosine_shape(self):
+        sched = warmup_cosine(2e-3, 5000, 20000)
+        assert float(sched(0)) == 0.0
+        np.testing.assert_allclose(float(sched(5000)), 2e-3, rtol=1e-5)
+        assert float(sched(20000)) < 1e-5
+        assert float(sched(2500)) == pytest.approx(1e-3, rel=1e-5)
+
+    def test_beta2_warmup_matches_paper_formula(self):
+        sched = beta2_warmup(0.5)
+        np.testing.assert_allclose(float(sched(100)), 1 - 100 ** -0.5,
+                                   rtol=1e-6)
+
+    @given(norm=st.floats(0.1, 100.0))
+    @settings(max_examples=20, deadline=None)
+    def test_property_clip_bounds_norm(self, norm):
+        g = {"w": jnp.full((16,), norm / 4.0)}
+        clipped, pre = clip_by_global_norm(g, 1.0)
+        post = float(jnp.linalg.norm(clipped["w"]))
+        assert post <= 1.0 + 1e-5

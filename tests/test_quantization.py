@@ -1,0 +1,130 @@
+"""Unit + property tests for the quantization primitives (paper Eq. 1-4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantization as Q
+from repro.core import fp8 as F8
+
+
+key = jax.random.PRNGKey(0)
+
+
+class TestInt8Quantizers:
+    def test_rowwise_roundtrip_error_bound(self):
+        x = jax.random.normal(key, (64, 256), jnp.float32)
+        q, s = Q.quantize_rowwise(x)
+        xh = Q.dequantize_rowwise(q, s)
+        # error per element <= half a quantization step (absmax/127/2)
+        step = s / 127.0
+        assert np.all(np.abs(np.asarray(xh - x)) <= np.asarray(step) / 2 + 1e-7)
+
+    def test_rowwise_state_shape_and_values(self):
+        x = jnp.array([[1.0, -4.0], [0.5, 0.25]])
+        q, s = Q.quantize_rowwise(x)
+        assert s.shape == (2, 1)
+        np.testing.assert_allclose(np.asarray(s).ravel(), [4.0, 0.5])
+        assert int(q[0, 1]) == -127          # absmax element hits ±127
+
+    def test_tensorwise_scalar_state(self):
+        x = jax.random.normal(key, (32, 32))
+        q, s = Q.quantize_tensorwise(x)
+        assert s.shape == ()
+        assert int(jnp.max(jnp.abs(q.astype(jnp.int32)))) == 127
+
+    def test_columnwise(self):
+        x = jnp.array([[1.0, 10.0], [-2.0, 5.0]])
+        q, s = Q.quantize_columnwise(x)
+        np.testing.assert_allclose(np.asarray(s).ravel(), [2.0, 10.0])
+
+    def test_zero_tensor_safe(self):
+        x = jnp.zeros((4, 8))
+        q, s = Q.quantize_rowwise(x)
+        assert np.all(np.asarray(q) == 0)
+        assert np.all(np.isfinite(np.asarray(s)))
+
+    def test_int8_matmul_matches_fp32_within_noise(self):
+        k1, k2 = jax.random.split(key)
+        x = jax.random.normal(k1, (128, 256))
+        w = jax.random.normal(k2, (64, 256)) * 0.1
+        x_q, s_x = Q.quantize_rowwise(x)
+        w_q, s_w = Q.quantize_tensorwise(w)
+        out = Q.int8_matmul_dequant_rowwise_tensorwise(x_q, w_q, s_x, s_w)
+        ref = x @ w.T
+        rel = np.abs(np.asarray(out - ref)).max() / np.abs(np.asarray(ref)).max()
+        assert rel < 0.03
+
+    @given(b=st.integers(1, 16), n=st.integers(1, 64))
+    @settings(max_examples=20, deadline=None)
+    def test_property_quantized_values_in_range(self, b, n):
+        x = jax.random.normal(jax.random.PRNGKey(b * 131 + n), (b, n)) * 100
+        q, s = Q.quantize_rowwise(x)
+        qv = np.asarray(q, np.int32)
+        assert qv.min() >= -127 and qv.max() <= 127
+
+    @given(scale=st.floats(1e-4, 1e4))
+    @settings(max_examples=20, deadline=None)
+    def test_property_scale_invariance(self, scale):
+        """Q_row(c·x) == Q_row(x): row-wise quant is scale-invariant."""
+        x = jax.random.normal(key, (8, 32))
+        q1, _ = Q.quantize_rowwise(x)
+        q2, _ = Q.quantize_rowwise(x * scale)
+        assert np.array_equal(np.asarray(q1), np.asarray(q2))
+
+
+class TestFP8:
+    @pytest.mark.parametrize("fmt,spec", [("e4m3", F8.E4M3), ("e5m2", F8.E5M2)])
+    def test_bit_oracle_matches_mldtypes(self, fmt, spec):
+        x = jax.random.normal(key, (4096,)) * 100
+        mine = np.asarray(F8.fp8_round(x, spec))
+        theirs = np.asarray(Q.fp8_cast(x, fmt))
+        # agreement except possible half-ulp tie-break at binade edges
+        bad = np.sum(mine != theirs)
+        assert bad <= 2, f"{bad} mismatches"
+
+    @pytest.mark.parametrize("fmt,spec", [("e4m3", F8.E4M3), ("e5m2", F8.E5M2)])
+    def test_rounded_values_are_representable(self, fmt, spec):
+        grid = F8.fp8_values(spec)
+        x = jax.random.normal(key, (2048,)) * 10
+        y = np.abs(np.asarray(F8.fp8_round(x, spec), np.float64))
+        for v in y:
+            assert np.any(np.isclose(grid, v, rtol=0, atol=0)), v
+
+    def test_saturation(self):
+        x = jnp.array([1e6, -1e6])
+        y = np.asarray(Q.fp8_cast(x, "e4m3"))
+        np.testing.assert_allclose(y, [448.0, -448.0])
+
+    @given(v=st.floats(-440.0, 440.0, allow_nan=False))
+    @settings(max_examples=50, deadline=None)
+    def test_property_rounding_error_bound(self, v):
+        x = jnp.asarray([v], jnp.float32)
+        y = F8.fp8_round(x, F8.E4M3)
+        step = F8.fp8_quantization_step(x, F8.E4M3)
+        assert abs(float(y[0]) - v) <= float(step[0]) / 2 + 1e-9
+
+    def test_tensorwise_fp8_scaling(self):
+        x = jax.random.normal(key, (32, 32)) * 7
+        q, s = Q.quantize_tensorwise_fp8(x, "e4m3")
+        assert float(jnp.max(jnp.abs(q))) <= 1.0 + 1e-6
+        rel = np.abs(np.asarray(q * s - x)).max() / float(s)
+        assert rel < 0.07       # e4m3 has ~2 decimal digits near 1.0
+
+
+class TestVarianceAnalysis:
+    def test_appendix_c_variance_grows_with_k(self):
+        """Paper App. C: quantization variance of an inner product grows
+        ~linearly with the inner dim k — the justification for SwitchBack."""
+        from repro.core.analysis import empirical_matmul_quant_error
+        k_small, k_large = 64, 1024
+        v_small, p_small = empirical_matmul_quant_error(
+            jax.random.PRNGKey(1), b=64, k=k_small, m=64)
+        v_large, p_large = empirical_matmul_quant_error(
+            jax.random.PRNGKey(2), b=64, k=k_large, m=64)
+        ratio = v_large / v_small
+        assert 4 < ratio, f"variance ratio {ratio} should grow with k"
+        # prediction within a factor ~3 of measurement (conservative model)
+        assert 0.3 < v_small / p_small < 3.0
+        assert 0.3 < v_large / p_large < 3.0

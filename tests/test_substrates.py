@@ -1,0 +1,219 @@
+"""Data pipeline, checkpointing, trainer loop, stability monitors,
+straggler watchdog — the operational substrate."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_reduced_config
+from repro.configs.base import ParallelConfig, TrainConfig
+from repro.core.precision import QuantPolicy
+from repro.data import BigramLM, SyntheticCLIP, PrefetchIterator
+from repro.distributed import StragglerWatchdog
+from repro.models import build
+from repro.models.params import init_params
+from repro.stability import LossSpikeDetector, RMSMonitor
+from repro.train import (Trainer, init_train_state, make_train_setup,
+                         make_train_step)
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestSyntheticData:
+    def test_bigram_deterministic_and_learnable(self):
+        d1 = BigramLM(64, seed=3)
+        d2 = BigramLM(64, seed=3)
+        b1, b2 = d1.batch(4, 16), d2.batch(4, 16)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        assert 0.0 < d1.entropy_floor() < np.log(64)
+        # labels are next-tokens
+        np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+    def test_clip_pairs_are_class_consistent(self):
+        d = SyntheticCLIP(16, 8, 128, n_classes=4, noise=0.0)
+        b = d.batch(16)
+        for i in range(16):
+            c = b["class_ids"][i]
+            np.testing.assert_allclose(b["images"][i], d.protos[c])
+
+    def test_prefetch_resumes_at_step(self):
+        calls = []
+
+        def batch_fn(step):
+            calls.append(step)
+            return {"x": np.full((2,), step)}
+
+        it = PrefetchIterator(batch_fn, start_step=7, depth=1)
+        step, batch = next(it)
+        assert step == 7 and batch["x"][0] == 7
+        step, _ = next(it)
+        assert step == 8
+        it.close()
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_rotation(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep_last=2)
+        tree = {"a": np.arange(6).reshape(2, 3),
+                "nested": {"b": np.ones((4,), np.float32)}}
+        for step in (10, 20, 30):
+            mgr.save(step, tree)
+        assert mgr.all_steps() == [20, 30]
+        loaded, step, _ = mgr.restore()
+        assert step == 30
+        np.testing.assert_array_equal(loaded["a"], tree["a"])
+        np.testing.assert_array_equal(loaded["nested"]["b"],
+                                      tree["nested"]["b"])
+
+    def test_async_save_and_atomicity(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep_last=3)
+        tree = {"w": np.random.randn(128, 64).astype(np.float32)}
+        mgr.save_async(1, tree)
+        mgr.wait()
+        assert mgr.latest_step() == 1
+        # no tmp dirs remain
+        assert not [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]
+
+    def test_namedtuple_state_roundtrip(self, tmp_path):
+        from repro.optim import stable_adamw
+        opt = stable_adamw(1e-3)
+        p = {"w": jnp.ones((4, 4))}
+        st = opt.init(p)
+        p2, st2, _ = opt.update(p, st, {"w": jnp.ones((4, 4))})
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(5, {"params": p2, "opt": st2})
+        loaded, _, _ = mgr.restore(like={"params": p2, "opt": st2})
+        np.testing.assert_allclose(np.asarray(loaded["params"]["w"]),
+                                   np.asarray(p2["w"]))
+        assert int(np.asarray(loaded["opt"].step
+                              if hasattr(loaded["opt"], "step")
+                              else loaded["opt"]["step"])) == 1
+
+    def test_elastic_restore_with_shardings(self, tmp_path):
+        """Restore device_puts onto the current (1-device) 'mesh' — the
+        elastic path: a checkpoint written under any mesh loads anywhere."""
+        mgr = CheckpointManager(str(tmp_path))
+        tree = {"w": np.random.randn(8, 8).astype(np.float32)}
+        mgr.save(1, tree)
+        shardings = {"w": jax.sharding.SingleDeviceSharding(
+            jax.devices()[0])}
+        loaded, _, _ = mgr.restore(shardings=shardings)
+        assert isinstance(loaded["w"], jax.Array)
+
+
+class TestTrainerEndToEnd:
+    def _setup(self, tmp_path=None, n_steps=8):
+        cfg = get_reduced_config("smollm-360m")
+        bundle = build(cfg)
+        params = init_params(bundle.param_specs, KEY)
+        tc = TrainConfig(optimizer="stable_adamw", learning_rate=3e-3,
+                         warmup_steps=5, total_steps=1000, beta2=0.95,
+                         loss_scaler="none", microbatch_steps=1)
+        par = ParallelConfig(remat="block")
+        opt, scaler = make_train_setup(tc)
+        step_fn = jax.jit(make_train_step(bundle, QuantPolicy("bf16"), par,
+                                          tc, opt, scaler))
+        state = init_train_state(params, opt, scaler)
+        # peaked transitions (entropy floor ~0.6) => fast visible learning
+        data = BigramLM(cfg.vocab_size, seed=0, temperature=0.2)
+
+        def batch_at(i):
+            return jax.tree.map(jnp.asarray, data.batch(4, 32))
+
+        return cfg, step_fn, state, batch_at
+
+    def test_loss_decreases(self):
+        _, step_fn, state, batch_at = self._setup()
+        losses = []
+        for i in range(40):
+            state, m = step_fn(state, batch_at(i))
+            losses.append(float(m["loss"]))
+        assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.5
+
+    def test_trainer_loop_with_checkpoint_resume(self, tmp_path):
+        _, step_fn, state, batch_at = self._setup()
+        tr = Trainer(step_fn, state, checkpoint_dir=str(tmp_path),
+                     checkpoint_every=4, log_every=0)
+        tr.run(lambda i: batch_at(i), 8)
+        assert tr.ckpt.latest_step() == 8
+        # simulate crash + restart
+        _, step_fn2, state2, _ = self._setup()
+        tr2 = Trainer(step_fn2, state2, checkpoint_dir=str(tmp_path),
+                      log_every=0)
+        start = tr2.maybe_resume()
+        assert start == 8
+        assert int(tr2.state.step) == 8
+
+    def test_microbatch_equals_full_batch(self):
+        """Gradient accumulation over 2 microbatches == one 2x batch."""
+        cfg = get_reduced_config("smollm-360m")
+        bundle = build(cfg)
+        params = init_params(bundle.param_specs, KEY)
+        par = ParallelConfig(remat="none")
+        pol = QuantPolicy("bf16", compute_dtype=jnp.float32)
+        batch = {"tokens": jax.random.randint(KEY, (4, 16), 0,
+                                              cfg.vocab_size),
+                 "labels": jax.random.randint(KEY, (4, 16), 0,
+                                              cfg.vocab_size)}
+
+        def grads_with(n_micro):
+            tc = TrainConfig(microbatch_steps=n_micro, loss_scaler="none",
+                             learning_rate=0.0, warmup_steps=1,
+                             total_steps=10)
+            opt, scaler = make_train_setup(tc)
+            fn = make_train_step(bundle, pol, par, tc, opt, scaler)
+            st = init_train_state(params, opt, scaler)
+            st2, m = fn(st, batch)
+            return m["loss"]
+
+        l1 = float(grads_with(1))
+        l2 = float(grads_with(2))
+        assert abs(l1 - l2) < 5e-3
+
+
+class TestStability:
+    def test_spike_detector_finds_planted_spikes(self):
+        det = LossSpikeDetector(ignore_first=0)
+        rng = np.random.RandomState(0)
+        for t in range(300):
+            loss = 2.0 + 0.01 * rng.randn()
+            if t in (100, 101, 102, 200, 201):
+                loss = 6.0
+            det.record(t, loss)
+        spikes = det.spike_steps()
+        assert 100 in spikes and 200 in spikes
+        assert len(spikes) == 2       # dedup within 10 iters
+
+    def test_rms_monitor_prediction_analysis(self):
+        mon = RMSMonitor(watch_layers=("patch",))
+        det = LossSpikeDetector(ignore_first=0)
+        rng = np.random.RandomState(1)
+        for t in range(400):
+            rms = 1.0 + 0.05 * rng.rand()
+            loss = 2.0 + 0.01 * rng.randn()
+            if t in (150, 151):
+                rms = 5.0                       # RMS spike
+            if t in (155, 156):
+                loss = 8.0                      # loss spike 5 iters later
+            mon.record(t, {"patch_embed": rms, "mid_layer": 1.0})
+            det.record(t, loss)
+        rep = mon.predicts_loss_spike("patch_embed", det.spike_steps())
+        assert rep["n_loss_spikes"] == 1
+        assert rep["n_predicted"] == 1
+        assert rep["chance_prob"] < 0.05
+
+    def test_watchdog_flags_slow_step(self):
+        wd = StragglerWatchdog(threshold=3.0, warmup_steps=0)
+        for i in range(6):
+            wd.step_start()
+            time.sleep(0.002)
+            wd.step_end(i)
+        wd.step_start()
+        time.sleep(0.05)
+        out = wd.step_end(99)
+        assert out["slow"]
+        assert wd.events and wd.events[-1]["step"] == 99

@@ -1,0 +1,155 @@
+"""SwitchBack custom-VJP tests: fidelity to the exact linear layer, the
+paper's key claims at unit scale, and variant semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import switchback as SB
+from repro.core.precision import QuantPolicy, quant_linear
+
+key = jax.random.PRNGKey(0)
+k1, k2, k3 = jax.random.split(key, 3)
+
+
+def _setup(b=128, n=256, m=96):
+    x = jax.random.normal(k1, (b, n), jnp.bfloat16)
+    w = jax.random.normal(k2, (n, m), jnp.float32) * 0.05
+    return x, w
+
+
+def _ref_grads(x, w):
+    def loss(x, w):
+        return jnp.sum(jnp.tanh(x.astype(jnp.float32) @ w))
+    return (x.astype(jnp.float32) @ w,
+            *jax.grad(loss, argnums=(0, 1))(x, w))
+
+
+@pytest.mark.parametrize("variant", SB.VARIANTS)
+def test_variant_close_to_exact(variant):
+    x, w = _setup()
+    f = SB.make_switchback_matmul(variant)
+
+    def loss(x, w):
+        return jnp.sum(jnp.tanh(f(x, w).astype(jnp.float32)))
+
+    y = f(x, w)
+    dx, dw = jax.grad(loss, argnums=(0, 1))(x, w)
+    ry, rdx, rdw = _ref_grads(x, w)
+    tol = 0.12 if variant.startswith("fp8") else 0.04
+    for got, ref in ((y, ry), (dx, rdx), (dw, rdw)):
+        rel = (np.abs(np.asarray(got, np.float32) - np.asarray(ref, np.float32)).max()
+               / (np.abs(np.asarray(ref)).max() + 1e-9))
+        assert rel < tol, f"{variant}: rel err {rel}"
+
+
+def test_wgrad_dtype_is_f32_and_dx_matches_input_dtype():
+    x, w = _setup()
+    f = SB.make_switchback_matmul("switchback")
+    dx, dw = jax.grad(lambda x, w: jnp.sum(
+        f(x, w).astype(jnp.float32)), argnums=(0, 1))(x, w)
+    assert dx.dtype == jnp.bfloat16      # activation grads stay bf16
+    assert dw.dtype == jnp.float32       # master-weight grads f32
+
+
+def test_switchback_wgrad_beats_llm_int8_wgrad():
+    """The paper's core claim at unit scale: with a huge inner dim b, the
+    int8 weight-grad (LLM.int8 style) is much noisier than the 16-bit one
+    (SwitchBack). App. C: noise grows with the inner dimension."""
+    b, n, m = 16384, 128, 64      # inner dim b is batch*seq — huge
+    x = jax.random.normal(k1, (b, n), jnp.bfloat16)
+    w = jax.random.normal(k2, (n, m), jnp.float32) * 0.05
+    g_out = jax.random.normal(k3, (b, m), jnp.bfloat16)
+
+    _, ref = jax.vjp(lambda w: (x.astype(jnp.float32) @ w), w)
+    dw_ref = ref(g_out.astype(jnp.float32))[0]
+
+    def dw_of(variant):
+        f = SB.make_switchback_matmul(variant)
+        _, vjp = jax.vjp(f, x, w)
+        return vjp(g_out)[1]
+
+    err_sb = np.abs(np.asarray(dw_of("switchback") - dw_ref)).mean()
+    err_llm = np.abs(np.asarray(dw_of("llm_int8") - dw_ref)).mean()
+    assert err_llm > 3 * err_sb, (err_llm, err_sb)
+
+
+def test_memory_variant_saves_int8_residuals():
+    """SwitchBackM's residuals must be int8 (the memory saving); verified
+    via the vjp closure's saved values."""
+    x, w = _setup(64, 128, 32)
+    f_m = SB.make_switchback_matmul("switchback_m")
+    _, vjp_m = jax.vjp(f_m, x, w)
+    leaves_m = jax.tree.leaves(vjp_m)
+    dtypes_m = sorted(str(l.dtype) for l in leaves_m if hasattr(l, "dtype")
+                      and l.size > 64)
+    # large residuals are int8 only (states are small f32)
+    assert all(d == "int8" for d in dtypes_m), dtypes_m
+
+    f_std = SB.make_switchback_matmul("switchback")
+    _, vjp_s = jax.vjp(f_std, x, w)
+    big = [l for l in jax.tree.leaves(vjp_s)
+           if hasattr(l, "dtype") and l.size >= x.size]
+    assert any(str(l.dtype) == "bfloat16" for l in big)  # std saves fp X
+
+
+def test_llm_int8_and_q_share_forward():
+    x, w = _setup()
+    y1 = SB.make_switchback_matmul("switchback_q")(x, w)
+    y2 = SB.make_switchback_matmul("llm_int8")(x, w)
+    np.testing.assert_array_equal(np.asarray(y1, np.float32),
+                                  np.asarray(y2, np.float32))
+
+
+def test_quant_linear_3d_batch_and_bias():
+    x = jax.random.normal(k1, (4, 8, 64), jnp.bfloat16)
+    w = jax.random.normal(k2, (64, 32), jnp.float32) * 0.1
+    b = jnp.ones((32,), jnp.float32)
+    pol = QuantPolicy("int8_switchback")
+    y = quant_linear(x, w, b, policy=pol)
+    assert y.shape == (4, 8, 32)
+    ref = x.astype(jnp.float32) @ w + 1.0
+    rel = np.abs(np.asarray(y, np.float32) - np.asarray(ref)).max() / \
+        np.abs(np.asarray(ref)).max()
+    assert rel < 0.05
+
+
+def test_rowwise_state_is_per_token_after_flatten():
+    """switchback_linear flattens (B, S, n) to (B·S, n): one scale per
+    token, exactly the paper's row-wise granularity."""
+    x = jnp.ones((2, 3, 8), jnp.bfloat16) * \
+        jnp.arange(1, 7, dtype=jnp.bfloat16).reshape(2, 3, 1)
+    w = jnp.eye(8, dtype=jnp.float32)
+    y = SB.switchback_linear(x, w)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(x, np.float32), rtol=0.02)
+
+
+def test_grad_through_jit_and_scan():
+    """custom_vjp composes with jit + scan (how models consume it)."""
+    x, w = _setup(32, 64, 64)
+    f = SB.make_switchback_matmul("switchback")
+
+    @jax.jit
+    def loss(x, w):
+        def body(c, _):
+            return f(c, w), None
+        y, _ = jax.lax.scan(body, x, None, length=3)
+        return jnp.sum(y.astype(jnp.float32))
+
+    dx, dw = jax.grad(loss, argnums=(0, 1))(x, w)
+    assert np.all(np.isfinite(np.asarray(dx, np.float32)))
+    assert np.all(np.isfinite(np.asarray(dw)))
+
+
+def test_vmap_expert_batching():
+    """vmapped SwitchBack = per-expert tensor-wise scales (MoE path)."""
+    E, C, d, ff = 4, 16, 32, 24
+    xs = jax.random.normal(k1, (E, C, d), jnp.bfloat16)
+    ws = jax.random.normal(k2, (E, d, ff), jnp.float32) * 0.1
+    f = SB.make_switchback_matmul("switchback")
+    y = jax.vmap(f)(xs, ws)
+    ref = jnp.einsum("ecd,edf->ecf", xs.astype(jnp.float32), ws)
+    rel = np.abs(np.asarray(y, np.float32) - np.asarray(ref)).max() / \
+        np.abs(np.asarray(ref)).max()
+    assert rel < 0.05
