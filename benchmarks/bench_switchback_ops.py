@@ -9,15 +9,23 @@ paper's Figure 3/4:
   * per-op breakdown (quantize / matmul / dequantize)
   * % time in quantize ops (paper Fig. 4-left: <25%, shrinking with dim)
   * end-to-end linear-layer speedup estimate (paper Fig. 3-right: 5-35%)
+
+``run(backend=...)`` additionally wall-clock-times each SwitchBack op
+through the backend-dispatch layer (kernels/switchback/ops.py), so on a
+TPU ``--backend pallas`` measures the fused kernels against the XLA path;
+``pallas_interpret`` only checks the dispatch plumbing (the interpreter is
+orders of magnitude slower — numbers are not meaningful there).
 """
 from __future__ import annotations
 
 import json
+import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.distributed.roofline import HBM_BW, PEAK_BF16, PEAK_INT8
+from repro.kernels.switchback import ops as K
 from repro.kernels.switchback import ref as R
 
 
@@ -55,7 +63,57 @@ def linear_layer_times(b: int, dim: int) -> dict:
     return out
 
 
-def run(out_json: str | None = None) -> dict:
+def _wallclock(f, *args, iters: int = 5) -> float:
+    y = jax.block_until_ready(f(*args))          # compile + warmup
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        y = jax.block_until_ready(f(*args))
+    del y
+    return (time.perf_counter() - t0) / iters
+
+
+def measure_ops(backend: str = "xla", b: int = 4096, dim: int = 1024,
+                iters: int = 5) -> dict:
+    """Wall-clock one SwitchBack linear's ops through the dispatch layer.
+
+    The same entry points the model hot path uses (ops.py), so this times
+    the padding + block choice + kernel, not just the kernel body.
+    """
+    kx, kw, kg = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(kx, (b, dim), jnp.bfloat16)
+    w = jax.random.normal(kw, (dim, 4 * dim), jnp.float32) * 0.1
+    g = jax.random.normal(kg, (b, 4 * dim), jnp.bfloat16)
+    w_q, s_w = R.tensor_quantize(w)
+    x_q, s_x = R.row_quantize(x)
+    scale = s_x * (s_w.reshape(()) / (127.0 * 127.0))
+    # fused dgrad: measure the MLP's second linear (4*dim -> dim), whose
+    # contraction dim is dim <= FUSED_MAX_CONTRACT — the shape the dispatch
+    # layer actually routes to the fused kernel (4*dim would take the
+    # two-step path and overflow the fused kernel's VMEM block)
+    w2_q, s_w2 = R.tensor_quantize(
+        jax.random.normal(kw, (4 * dim, dim), jnp.float32) * 0.1)
+    g2 = jax.random.normal(kg, (b, dim), jnp.bfloat16)
+    out = {
+        "row_quantize": _wallclock(
+            lambda: K.row_quantize(x, backend=backend), iters=iters),
+        "tensor_quantize": _wallclock(
+            lambda: K.tensor_quantize(w, backend=backend), iters=iters),
+        "int8_matmul_dequant": _wallclock(
+            lambda: K.int8_matmul_dequant(x_q, w_q, scale, backend=backend),
+            iters=iters),
+        "fused_fwd": _wallclock(
+            lambda: K.fused_switchback_fwd(x, w_q, s_w, backend=backend),
+            iters=iters),
+        "fused_dgrad": _wallclock(
+            lambda: K.fused_switchback_dgrad(g2, w2_q, s_w2, backend=backend),
+            iters=iters),
+        "wgrad_bf16": _wallclock(
+            lambda: K.wgrad_bf16(x, g, backend=backend), iters=iters),
+    }
+    return out
+
+
+def run(out_json: str | None = None, backend: str = "xla") -> dict:
     results = {}
     print(f"{'dim':>6} {'b=seq*bs':>9} | {'quant%':>7} {'fwd speedup':>12} "
           f"{'layer speedup':>14}")
@@ -90,6 +148,18 @@ def run(out_json: str | None = None) -> dict:
     print(f"CLAIM end-to-end linear speedup positive and grows with dim "
           f"(paper 5-35%): {'PASS' if sp[-1] > 0 else 'FAIL'} "
           f"(range {min(sp):.0f}%..{max(sp):.0f}%)")
+
+    # measured per-op wall-clock through the dispatch layer (XLA always;
+    # plus the requested backend when it differs)
+    measured = {"xla": measure_ops("xla")}
+    if backend != "xla":
+        measured[backend] = measure_ops(backend)
+    results["measured_ops_s"] = measured
+    print(f"measured per-op wall-clock (b=4096, dim=1024):")
+    for be, ops_t in measured.items():
+        row = "  ".join(f"{k}={v*1e3:.2f}ms" for k, v in ops_t.items())
+        print(f"  [{be}] {row}")
+
     if out_json:
         with open(out_json, "w") as f:
             json.dump(results, f, indent=1)
@@ -97,4 +167,10 @@ def run(out_json: str | None = None) -> dict:
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="xla",
+                    choices=("xla", "pallas", "pallas_interpret"))
+    ap.add_argument("--out", default=None)
+    a = ap.parse_args()
+    run(out_json=a.out, backend=a.backend)

@@ -38,6 +38,7 @@ def train_clip(quant_mode: str = "bf16", *, steps: int = 200,
                loss_scaler: str = "none", seed: int = 0,
                collect_stats: bool = False,
                n_classes: int = 32, noise: float = 0.3,
+               kernel_backend: str = "xla",
                cfg: Optional[CLIPConfig] = None) -> Dict:
     """Train the bench CLIP; returns loss curve + zero-shot accuracy +
     per-block feature magnitudes."""
@@ -49,9 +50,10 @@ def train_clip(quant_mode: str = "bf16", *, steps: int = 200,
     tc = TrainConfig(optimizer=optimizer, learning_rate=lr,
                      warmup_steps=max(steps // 10, 1), total_steps=steps,
                      beta2=beta2, weight_decay=0.2,
-                     grad_clip_norm=grad_clip, loss_scaler=loss_scaler)
+                     grad_clip_norm=grad_clip, loss_scaler=loss_scaler,
+                     quant_mode=quant_mode, kernel_backend=kernel_backend)
     par = ParallelConfig(remat="block")
-    policy = QuantPolicy(quant_mode)
+    policy = QuantPolicy.from_train_config(tc)
     opt, scaler = make_train_setup(tc)
     step = jax.jit(make_train_step(bundle, policy, par, tc, opt, scaler))
     state = init_train_state(params, opt, scaler, seed)

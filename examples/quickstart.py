@@ -37,6 +37,15 @@ print(f"grad dtypes: dX={dx.dtype} (int8 path), dW={dw.dtype} (16-bit path)")
 y = quant_linear(x, w, policy=QuantPolicy("int8_switchback"))
 print(f"policy dispatch ok: {y.shape} {y.dtype}")
 
+# flip every int8 matmul onto the hand-tiled Pallas kernels (interpret mode
+# here so it runs on CPU; pass backend="pallas" on a real TPU):
+y_k = quant_linear(x, w, policy=QuantPolicy("int8_switchback",
+                                            backend="pallas_interpret"))
+rel_k = float(jnp.max(jnp.abs(y_k.astype(jnp.float32)
+                              - y.astype(jnp.float32)))
+              / jnp.max(jnp.abs(y_exact)))
+print(f"Pallas kernel backend: rel diff vs XLA path = {rel_k:.5f}")
+
 # --- 2. StableAdamW update clipping ----------------------------------------
 def run(opt, label):
     p = {"w": jnp.zeros((8,))}

@@ -44,6 +44,8 @@ def main():
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--quant-mode", default="int8_switchback")
+    ap.add_argument("--kernel-backend", default="xla",
+                    choices=("xla", "pallas", "pallas_interpret"))
     ap.add_argument("--model", default="small", choices=["small", "100m"])
     ap.add_argument("--ckpt-dir", default="/tmp/repro_clip_ckpt")
     args = ap.parse_args()
@@ -58,9 +60,10 @@ def main():
     tc = TrainConfig(optimizer="stable_adamw", learning_rate=1e-3,
                      warmup_steps=args.steps // 10, total_steps=args.steps,
                      beta2=0.95, weight_decay=0.2, loss_scaler="none",
-                     quant_mode=args.quant_mode)
+                     quant_mode=args.quant_mode,
+                     kernel_backend=args.kernel_backend)
     par = ParallelConfig(remat="block")
-    policy = QuantPolicy(args.quant_mode)
+    policy = QuantPolicy.from_train_config(tc)
     opt, scaler = make_train_setup(tc)
     step_fn = jax.jit(make_train_step(bundle, policy, par, tc, opt, scaler))
     state = init_train_state(params, opt, scaler)

@@ -162,6 +162,8 @@ class TrainConfig:
     grad_clip_norm: float = 0.0      # 0 = off (paper default: no grad clip)
     loss_scaler: str = "none"        # none|fixed_tensor|dynamic
     quant_mode: str = "bf16"         # precision policy for all linears
+    kernel_backend: str = "xla"      # xla|pallas|pallas_interpret — int8
+    # matmul implementation for quantized modes (QuantPolicy.backend)
     seed: int = 0
     global_batch: int = 256
     seq_len: int = 4096

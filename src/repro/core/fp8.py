@@ -65,14 +65,17 @@ def fp8_round(x: jax.Array, spec: FP8Spec) -> jax.Array:
     mag = jnp.abs(xf)
     mag = jnp.minimum(mag, spec.max_value)
 
-    # exponent of the leading bit (floor(log2 mag)) for normals
+    # exponent of the leading bit (floor(log2 mag)) for normals. frexp gives
+    # mag = m·2^e with m ∈ [0.5, 1) EXACTLY — log2/exp2 are off by an ulp at
+    # some inputs, which would put the "oracle" off the fp8 grid.
     safe = jnp.maximum(mag, jnp.finfo(jnp.float32).tiny)
-    exp = jnp.floor(jnp.log2(safe))
+    _, e = jnp.frexp(safe)
+    exp = e - 1
     # clamp to the normal range; below it we are subnormal with fixed step
     min_normal_exp = 1 - spec.bias
     exp = jnp.maximum(exp, min_normal_exp)
-    # quantization step at this exponent: 2^(exp - man_bits)
-    step = jnp.exp2(exp - spec.man_bits)
+    # quantization step at this exponent: 2^(exp - man_bits), exact via ldexp
+    step = jnp.ldexp(jnp.ones_like(mag), exp - spec.man_bits)
     q = jnp.round(mag / step)  # round-half-to-even (jnp.round semantics)
     out = q * step
     # rounding can carry into the next binade (e.g. 1.9999 -> 2.0); that is
@@ -86,5 +89,6 @@ def fp8_quantization_step(mag: jax.Array, spec: FP8Spec) -> jax.Array:
     """Absolute rounding step size at magnitude ``mag`` (for error-bound
     property tests: |fp8_round(x) - x| <= step/2)."""
     safe = jnp.maximum(jnp.abs(mag), jnp.finfo(jnp.float32).tiny)
-    exp = jnp.maximum(jnp.floor(jnp.log2(safe)), 1 - spec.bias)
-    return jnp.exp2(exp - spec.man_bits)
+    _, e = jnp.frexp(safe)
+    exp = jnp.maximum(e - 1, 1 - spec.bias)
+    return jnp.ldexp(jnp.ones_like(safe), exp - spec.man_bits)

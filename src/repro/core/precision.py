@@ -23,6 +23,8 @@ MODES = (
     "fp8_sim", "fp8_switchback",
 )
 
+BACKENDS = SB.BACKENDS   # ("xla", "pallas", "pallas_interpret")
+
 _SB_VARIANT = {
     "int8_switchback": "switchback",
     "int8_switchback_m": "switchback_m",
@@ -31,6 +33,11 @@ _SB_VARIANT = {
     "fp8_sim": "fp8_sim",
     "fp8_switchback": "fp8_switchback",
 }
+
+
+def variant_for_mode(mode: str) -> str:
+    """The core/switchback.py variant name for a quantized policy mode."""
+    return _SB_VARIANT[mode]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,16 +53,24 @@ class QuantPolicy:
     compute_dtype: activation dtype between quantized ops.
     param_dtype: master weight dtype (f32; the optimizer sees this).
     fwd_fmt / bwd_fmt: fp8 formats for forward operands / gradients.
+    backend: int8 matmul implementation for quantized modes — ``xla``
+        (plain dot_general), ``pallas`` (the hand-tiled TPU kernels in
+        kernels/switchback, the production hot path) or ``pallas_interpret``
+        (same kernels interpreted; CPU parity testing). One config field
+        flips every linear in the model between the XLA and Pallas paths.
     """
     mode: str = "bf16"
     compute_dtype: jnp.dtype = jnp.bfloat16
     param_dtype: jnp.dtype = jnp.float32
     fwd_fmt: str = "e4m3"
     bwd_fmt: str = "e5m2"
+    backend: str = "xla"
 
     def __post_init__(self):
         if self.mode not in MODES:
             raise ValueError(f"mode {self.mode!r} not in {MODES}")
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend {self.backend!r} not in {BACKENDS}")
 
     @property
     def is_quantized(self) -> bool:
@@ -63,6 +78,15 @@ class QuantPolicy:
 
     def with_mode(self, mode: str) -> "QuantPolicy":
         return dataclasses.replace(self, mode=mode)
+
+    def with_backend(self, backend: str) -> "QuantPolicy":
+        return dataclasses.replace(self, backend=backend)
+
+    @classmethod
+    def from_train_config(cls, tc) -> "QuantPolicy":
+        """The single way launchers derive the policy from a TrainConfig:
+        ``quant_mode`` + ``kernel_backend`` stay in sync by construction."""
+        return cls(tc.quant_mode, backend=getattr(tc, "kernel_backend", "xla"))
 
 
 BF16 = QuantPolicy("bf16")
@@ -83,7 +107,8 @@ def quant_linear(x: Array, w: Array, b: Optional[Array] = None, *,
         return SB.switchback_linear(
             xq, w.astype(jnp.float32), b,
             variant=_SB_VARIANT[policy.mode],
-            fwd_fmt=policy.fwd_fmt, bwd_fmt=policy.bwd_fmt)
+            fwd_fmt=policy.fwd_fmt, bwd_fmt=policy.bwd_fmt,
+            backend=policy.backend)
     cd = (jnp.float32 if policy.mode == "fp32" else policy.compute_dtype)
     y = jax.lax.dot_general(
         x.astype(cd), w.astype(cd),

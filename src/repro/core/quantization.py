@@ -123,6 +123,36 @@ def int8_matmul_dequant_rowwise_rowwise(
 FP8Format = Literal["e4m3", "e5m2"]
 _FP8_DTYPES = {"e4m3": jnp.float8_e4m3fn, "e5m2": jnp.float8_e5m2}
 FP8_MAX = {"e4m3": 448.0, "e5m2": 57344.0}
+_FP8_MAN = {"e4m3": 3, "e5m2": 2}
+_FP8_BIAS = {"e4m3": 7, "e5m2": 15}
+
+
+def fp8_grid_round(x: Array, fmt: FP8Format = "e4m3") -> Array:
+    """Round f32 values onto the fp8 grid IN f32 (round-to-nearest-even).
+
+    XLA's f32→f8 convert routes through f16 on some backends (CPU in jax
+    0.4.x); that double rounding moves half-ulp ties a full quantization
+    step. Rounding in f32 first makes the later dtype cast exact. Uses only
+    bitcast/shift/and/add so the same code runs inside Pallas kernels
+    (kernels/fp8_cast) and in the XLA graph.
+    """
+    man, bias = _FP8_MAN[fmt], _FP8_BIAS[fmt]
+    xf = jnp.clip(x.astype(jnp.float32), -FP8_MAX[fmt], FP8_MAX[fmt])
+    # normals: RNE at `man` mantissa bits via the classic bit trick (the
+    # mantissa-add carries into the exponent exactly when it should)
+    bits = jax.lax.bitcast_convert_type(xf, jnp.uint32)
+    sign = bits & jnp.uint32(0x80000000)
+    mag = bits & jnp.uint32(0x7FFFFFFF)
+    shift = 23 - man
+    lsb = (mag >> shift) & jnp.uint32(1)
+    magr = (mag + jnp.uint32((1 << (shift - 1)) - 1) + lsb) \
+        & jnp.uint32((~((1 << shift) - 1)) & 0xFFFFFFFF)
+    pre = jax.lax.bitcast_convert_type(sign | magr, jnp.float32)
+    # fp8-subnormal region: fixed absolute step 2^(1-bias-man)
+    sub_step = 2.0 ** (1 - bias - man)
+    sub = jnp.round(xf / sub_step) * sub_step
+    out = jnp.where(jnp.abs(xf) < 2.0 ** (1 - bias), sub, pre)
+    return jnp.clip(out, -FP8_MAX[fmt], FP8_MAX[fmt])
 
 
 def fp8_cast(x: Array, fmt: FP8Format = "e4m3") -> Array:
@@ -131,9 +161,7 @@ def fp8_cast(x: Array, fmt: FP8Format = "e4m3") -> Array:
     16/32-bit arithmetic). Saturates at the format max (no Inf/NaN blow-up,
     matching saturating-cast hardware semantics)."""
     dt = _FP8_DTYPES[fmt]
-    xf = x.astype(jnp.float32)
-    xf = jnp.clip(xf, -FP8_MAX[fmt], FP8_MAX[fmt])
-    return xf.astype(dt).astype(jnp.float32)
+    return fp8_grid_round(x, fmt).astype(dt).astype(jnp.float32)
 
 
 def quantize_tensorwise_fp8(x: Array, fmt: FP8Format = "e4m3") -> Tuple[Array, Array]:

@@ -34,6 +34,21 @@ quantizer (``tensor-wise_quantize_transpose``) because cuBLAS int8 only
 implements ABᵀ.  The TPU MXU contracts arbitrary dimension pairs through
 ``lax.dot_general`` dimension numbers, so no transpose is ever materialized
 here — see DESIGN.md §3.
+
+Backends: every int8 variant can route its forward and input-grad (dgrad)
+matmuls through the hand-tiled Pallas kernels in ``kernels/switchback``:
+
+* ``xla``              (default) plain ``lax.dot_general`` — what the XLA
+                       compiler does with the int8 dots on its own.
+* ``pallas``           the compiled Pallas TPU kernels (fused quantize /
+                       dequant epilogues, DESIGN.md §3) — the hot path.
+* ``pallas_interpret`` the same kernels in interpret mode — runs anywhere
+                       (CPU), used by the parity tests.
+
+The 16-bit weight-grad matmul always stays on ``dot_general``: it is the
+paper's "switch back" and XLA already emits an optimal bf16 MXU matmul for
+it.  The fp8 variants are simulation-only (no fp8 Pallas kernels) and
+ignore the backend knob.
 """
 from __future__ import annotations
 
@@ -44,6 +59,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quantization as Q
+from repro.kernels.switchback import ops as KOPS
 
 Array = jax.Array
 Variant = Literal[
@@ -55,6 +71,8 @@ VARIANTS: Tuple[str, ...] = (
     "switchback", "switchback_m", "switchback_q", "llm_int8",
     "fp8_sim", "fp8_switchback",
 )
+
+BACKENDS: Tuple[str, ...] = KOPS.BACKENDS
 
 
 # ---------------------------------------------------------------------------
@@ -126,6 +144,37 @@ def _wgrad_int8(x: Array, g: Array) -> Array:
     return dw
 
 
+# Pallas-kernel equivalents (kernels/switchback/ops.py dispatchers) ---------
+
+def _kfwd_rowwise_tensorwise(x: Array, w: Array, out_dtype, backend: str):
+    """Eq. (3) forward on the Pallas path. Uses the single-HBM-pass fused
+    quantize+matmul kernel when K fits one VMEM block, else the two-step
+    row-quantize → tiled-matmul pipeline (same math, DESIGN.md §3)."""
+    w_q, s_w = KOPS.tensor_quantize(w, backend=backend)      # (n, m), (1, 1)
+    if x.shape[1] <= KOPS.FUSED_MAX_CONTRACT:
+        y = KOPS.fused_switchback_fwd(x, w_q, s_w, out_dtype=out_dtype,
+                                      backend=backend)
+    else:
+        x_q, s_x = KOPS.row_quantize(x, backend=backend)
+        y = KOPS.int8_matmul_dequant(x_q, w_q, s_x * (s_w / _I2),
+                                     out_dtype=out_dtype, backend=backend)
+    return y, w_q, s_w
+
+
+def _kdgrad_tensorwise(g: Array, w_q: Array, s_w: Array, out_dtype,
+                       backend: str):
+    """Ẋ = Ẏ Wᵀ on the Pallas path: fused Ẏ-quantize dgrad kernel when the
+    contraction dim m fits one VMEM block, else two-step. ``w_q`` is the
+    forward's int8 W, contracted over its second dim — never transposed."""
+    if g.shape[1] <= KOPS.FUSED_MAX_CONTRACT:
+        return KOPS.fused_switchback_dgrad(g, w_q, s_w, out_dtype=out_dtype,
+                                           backend=backend)
+    g_q, s_g = KOPS.row_quantize(g, backend=backend)
+    return KOPS.int8_matmul_dequant(g_q, w_q, s_g * (s_w / _I2),
+                                    transpose_w=True, out_dtype=out_dtype,
+                                    backend=backend)
+
+
 # fp8 equivalents -----------------------------------------------------------
 
 def _fwd_fp8_tensorwise(x: Array, w: Array, out_dtype, fwd_fmt: str):
@@ -151,28 +200,57 @@ def _fwd_fp8_rowwise_tensorwise(x: Array, w: Array, out_dtype, fwd_fmt: str):
 @functools.lru_cache(maxsize=None)
 def make_switchback_matmul(variant: str = "switchback",
                            fwd_fmt: str = "e4m3",
-                           bwd_fmt: str = "e5m2"):
+                           bwd_fmt: str = "e5m2",
+                           backend: str = "xla"):
     """Build the custom-VJP 2-D matmul ``f(x2d, w) -> y2d`` for a variant.
 
     x2d: (b, n) activations (b = flattened batch*seq), w: (n, m) weights.
     Gradients: dx in x.dtype, dw in f32 (master-weight precision).
+
+    ``backend`` routes the int8 forward/dgrad matmuls: ``xla`` (plain
+    ``dot_general``), ``pallas`` (the fused TPU kernels) or
+    ``pallas_interpret`` (same kernels, interpreter — CPU-testable). The
+    16-bit weight-grad and the fp8 variants always use ``dot_general``.
     """
     if variant not in VARIANTS:
         raise ValueError(f"unknown SwitchBack variant {variant!r}; "
                          f"expected one of {VARIANTS}")
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown kernel backend {backend!r}; "
+                         f"expected one of {BACKENDS}")
+    use_kernels = backend != "xla" and not variant.startswith("fp8")
 
     # ---------------- forward implementations -----------------------------
     # The variant is static (factory closure), so residuals are pure arrays.
     def fwd(x, w):
         odt = x.dtype
         if variant == "switchback":
-            y, (x_q, s_x, w_q, s_w) = _fwd_int8_rowwise_tensorwise(x, w, odt)
+            if use_kernels:
+                y, w_q, s_w = _kfwd_rowwise_tensorwise(x, w, odt, backend)
+            else:
+                y, (x_q, s_x, w_q, s_w) = _fwd_int8_rowwise_tensorwise(
+                    x, w, odt)
             res = (x, w_q, s_w)                       # fp X + int8 W
         elif variant == "switchback_m":
-            y, (x_q, s_x, w_q, s_w) = _fwd_int8_rowwise_tensorwise(x, w, odt)
+            if use_kernels:
+                x_q, s_x = KOPS.row_quantize(x, backend=backend)
+                w_q, s_w = KOPS.tensor_quantize(w, backend=backend)
+                y = KOPS.int8_matmul_dequant(
+                    x_q, w_q, s_x * (s_w / _I2), out_dtype=odt,
+                    backend=backend)
+            else:
+                y, (x_q, s_x, w_q, s_w) = _fwd_int8_rowwise_tensorwise(
+                    x, w, odt)
             res = (x_q, s_x, w_q, s_w)                # int8 residuals only
         elif variant in ("switchback_q", "llm_int8"):
-            y, _ = _fwd_int8_rowwise_colwise(x, w, odt)
+            if use_kernels:
+                x_q, s_x = KOPS.row_quantize(x, backend=backend)
+                w_q, s_w = KOPS.col_quantize(w, backend=backend)  # (1, m)
+                y = KOPS.int8_matmul_dequant(
+                    x_q, w_q, s_x / _I2, col_scale=s_w, out_dtype=odt,
+                    backend=backend)
+            else:
+                y, _ = _fwd_int8_rowwise_colwise(x, w, odt)
             res = (x, w)                              # re-quantize W in bwd
         elif variant == "fp8_sim":
             y, _ = _fwd_fp8_tensorwise(x, w, odt, fwd_fmt)
@@ -194,21 +272,32 @@ def make_switchback_matmul(variant: str = "switchback",
             else:
                 x_q, s_x, w_q, s_w = res
                 x = Q.dequantize_rowwise(x_q, s_x, jnp.bfloat16)  # extra dequant (Alg. 3)
-            g_q, s_g = Q.quantize_rowwise(g)
-            dx = _dgrad_int8(g_q, w_q, s_g, s_w, odt)
+            if use_kernels:
+                dx = _kdgrad_tensorwise(g, w_q, s_w, odt, backend)
+            else:
+                g_q, s_g = Q.quantize_rowwise(g)
+                dx = _dgrad_int8(g_q, w_q, s_g, s_w, odt)
             dw = _wgrad_16bit(x, g)
             return dx, dw
 
         if variant in ("switchback_q", "llm_int8"):
             x, w = res
-            g_q, s_g = Q.quantize_rowwise(g)
             # column-wise W state (1, m) sits on the *contracted* dim of the
             # dgrad matmul, so it cannot be folded out — quantize W row-wise
             # along n instead (paper Alg. 4: column-wise_quantize_transpose,
             # i.e. per-n scales after transposition; identical semantics).
-            w_q_n, s_w_n = Q.quantize_rowwise(w)      # (n, m), state (n, 1)
-            acc = _dot_i8(g_q, w_q_n, (1, 1))         # (b, n)
-            dx = (acc.astype(jnp.float32) * (s_g * (s_w_n.T / _I2))).astype(odt)
+            if use_kernels:
+                g_q, s_g = KOPS.row_quantize(g, backend=backend)
+                w_q_n, s_w_n = KOPS.row_quantize(w, backend=backend)
+                dx = KOPS.int8_matmul_dequant(
+                    g_q, w_q_n, s_g / _I2, col_scale=s_w_n.T,
+                    transpose_w=True, out_dtype=odt, backend=backend)
+            else:
+                g_q, s_g = Q.quantize_rowwise(g)
+                w_q_n, s_w_n = Q.quantize_rowwise(w)  # (n, m), state (n, 1)
+                acc = _dot_i8(g_q, w_q_n, (1, 1))     # (b, n)
+                dx = (acc.astype(jnp.float32)
+                      * (s_g * (s_w_n.T / _I2))).astype(odt)
             if variant == "llm_int8":
                 dw = _wgrad_int8(x, g)                # the fatal int8 wgrad
             else:
@@ -245,14 +334,16 @@ def make_switchback_matmul(variant: str = "switchback",
 
 def switchback_linear(x: Array, w: Array, b: Array | None = None, *,
                       variant: str = "switchback",
-                      fwd_fmt: str = "e4m3", bwd_fmt: str = "e5m2") -> Array:
+                      fwd_fmt: str = "e4m3", bwd_fmt: str = "e5m2",
+                      backend: str = "xla") -> Array:
     """Apply a SwitchBack linear to ``x`` of shape (..., n) with ``w`` of
     shape (n, m). Leading dims are flattened for the 2-D quantized matmul
-    (row-wise state = one scale per token, as in the paper) and restored."""
+    (row-wise state = one scale per token, as in the paper) and restored.
+    ``backend`` selects the int8 matmul implementation (module docstring)."""
     n = x.shape[-1]
     lead = x.shape[:-1]
     x2 = x.reshape((-1, n))
-    f = make_switchback_matmul(variant, fwd_fmt, bwd_fmt)
+    f = make_switchback_matmul(variant, fwd_fmt, bwd_fmt, backend)
     y2 = f(x2, w)
     y = y2.reshape(lead + (w.shape[-1],))
     if b is not None:

@@ -19,11 +19,14 @@ _FMT_MAX = {"e4m3": 448.0, "e5m2": 57344.0}
 
 
 def _fp8_cast_kernel(x_ref, s_ref, o_ref, *, fmt: str):
+    # the shared f32 grid-round (bit ops only — Mosaic-lowerable) makes the
+    # dtype cast exact; see core/quantization.fp8_grid_round
+    from repro.core.quantization import fp8_grid_round
     dt = _FMT_DTYPE[fmt]
     x = x_ref[...].astype(jnp.float32)
     inv = 1.0 / jnp.maximum(s_ref[0, 0], 1e-12)
     scaled = jnp.clip(x * inv, -_FMT_MAX[fmt], _FMT_MAX[fmt])
-    o_ref[...] = scaled.astype(dt).astype(jnp.float32)
+    o_ref[...] = fp8_grid_round(scaled, fmt).astype(dt).astype(jnp.float32)
 
 
 def fp8_cast_tensorwise(x: jax.Array, absmax: jax.Array, *, fmt: str = "e4m3",

@@ -16,10 +16,16 @@ from repro.kernels.switchback import ref as _ref
 from repro.kernels.switchback import switchback as _k
 
 Backend = Literal["xla", "pallas", "pallas_interpret"]
+BACKENDS: tuple[str, ...] = ("xla", "pallas", "pallas_interpret")
 
 # v5e VMEM is ~16 MiB; leave headroom for double-buffering (Pallas pipelines
 # two blocks per operand) and semaphores.
 VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+# The fused quantize+matmul kernels keep the whole contraction dim in one
+# VMEM block; above this the two-step quantize→tiled-matmul path wins
+# (DESIGN.md §3).
+FUSED_MAX_CONTRACT = 2048
 
 
 def choose_blocks(B: int, K: int, M: int) -> tuple[int, int, int]:
@@ -68,6 +74,20 @@ def row_quantize(x: jax.Array, backend: Backend = "xla"):
 
 
 @functools.partial(jax.jit, static_argnames=("backend",))
+def col_quantize(x: jax.Array, backend: Backend = "xla"):
+    """x (R, C) -> (q int8 (R, C), state f32 (1, C)): per-column scales
+    (SwitchBackQ / LLM.int8 weight quantization, paper Eq. 4)."""
+    if backend == "xla":
+        return _ref.col_quantize(x)
+    interp = backend == "pallas_interpret"
+    C = x.shape[1]
+    bc = 256 if C >= 256 else C
+    xp = _pad_to(x, (1, bc))   # zero cols: scale floors at 1e-12, sliced off
+    q, s = _k.col_quantize(xp, block_c=bc, interpret=interp)
+    return q[:, :C], s[:, :C]
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
 def tensor_quantize(x: jax.Array, backend: Backend = "xla"):
     if backend == "xla":
         return _ref.tensor_quantize(x)
@@ -80,16 +100,20 @@ def tensor_quantize(x: jax.Array, backend: Backend = "xla"):
 
 
 @functools.partial(jax.jit, static_argnames=("transpose_w", "out_dtype", "backend"))
-def int8_matmul_dequant(x_q, w_q, row_scale, *, transpose_w=False,
-                        out_dtype=jnp.bfloat16, backend: Backend = "xla"):
-    """y = row_scale ⊙ (x_q · w_q[ᵀ]) with int32 accumulation.
+def int8_matmul_dequant(x_q, w_q, row_scale, *, col_scale=None,
+                        transpose_w=False, out_dtype=jnp.bfloat16,
+                        backend: Backend = "xla"):
+    """y = row_scale ⊙ (x_q · w_q[ᵀ]) [⊙ col_scale] with int32 accumulation.
 
     `row_scale` is (B, 1) f32 and already folds the weight scale
     (s_x · s_w/127²) so the epilogue is a single broadcast multiply.
+    With column-wise weight states (paper Eq. 4) pass the (1, M) scale as
+    `col_scale` instead — the epilogue becomes a rank-1 scale.
     """
     if backend == "xla":
         return _ref.int8_matmul_dequant(
-            x_q, w_q, row_scale, transpose_w=transpose_w, out_dtype=out_dtype)
+            x_q, w_q, row_scale, col_scale=col_scale,
+            transpose_w=transpose_w, out_dtype=out_dtype)
     interp = backend == "pallas_interpret"
     B, K = x_q.shape
     M = w_q.shape[0] if transpose_w else w_q.shape[1]
@@ -97,9 +121,11 @@ def int8_matmul_dequant(x_q, w_q, row_scale, *, transpose_w=False,
     xp = _pad_to(x_q, (bb, bk))
     wp = _pad_to(w_q, (bm, bk) if transpose_w else (bk, bm))
     sp = _pad_to(row_scale, (bb, 1))
+    cp = None if col_scale is None else _pad_to(col_scale, (1, bm))
     y = _k.int8_matmul_dequant(
-        xp, wp, sp, transpose_w=transpose_w, out_dtype=out_dtype,
-        block_b=bb, block_m=bm, block_k=bk, interpret=interp)
+        xp, wp, sp, col_scale=cp, transpose_w=transpose_w,
+        out_dtype=out_dtype, block_b=bb, block_m=bm, block_k=bk,
+        interpret=interp)
     return y[:B, :M]
 
 
@@ -119,6 +145,26 @@ def fused_switchback_fwd(x, w_q, s_w, *, out_dtype=jnp.bfloat16,
     y = _k.fused_switchback_fwd(xp, wp, s_w, out_dtype=out_dtype,
                                 block_b=bb, block_m=bm, interpret=interp)
     return y[:B, :M]
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "backend"))
+def fused_switchback_dgrad(g, w_q, s_w, *, out_dtype=jnp.bfloat16,
+                           backend: Backend = "xla"):
+    """Input-grad SwitchBack with fused Ẏ row-quantize (M in one VMEM
+    block): dx = s_g ⊙ (Q_row(Ẏ) · Wᵢ₈ᵀ) · s_w/127², contracting over m via
+    dimension numbers — W stays (n, m) as the forward quantized it."""
+    if backend == "xla":
+        return _ref.fused_switchback_dgrad(g, w_q, s_w, out_dtype=out_dtype)
+    interp = backend == "pallas_interpret"
+    B, M = g.shape
+    N = w_q.shape[0]
+    bb = min(256, B)
+    bn = min(512, N)
+    gp = _pad_to(g, (bb, 1))
+    wp = _pad_to(w_q, (bn, 1))
+    dx = _k.fused_switchback_dgrad(gp, wp, s_w, out_dtype=out_dtype,
+                                   block_b=bb, block_n=bn, interpret=interp)
+    return dx[:B, :N]
 
 
 @functools.partial(jax.jit, static_argnames=("backend",))

@@ -12,6 +12,13 @@ def row_quantize(x: jax.Array):
     return q, absmax
 
 
+def col_quantize(x: jax.Array):
+    xf = x.astype(jnp.float32)
+    absmax = jnp.maximum(jnp.max(jnp.abs(xf), axis=0, keepdims=True), 1e-12)
+    q = jnp.round(xf * (127.0 / absmax)).astype(jnp.int8)
+    return q, absmax
+
+
 def tensor_quantize(x: jax.Array):
     xf = x.astype(jnp.float32)
     absmax = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12).reshape(1, 1)
@@ -19,18 +26,26 @@ def tensor_quantize(x: jax.Array):
     return q, absmax
 
 
-def int8_matmul_dequant(x_q, w_q, row_scale, *, transpose_w=False,
-                        out_dtype=jnp.bfloat16):
+def int8_matmul_dequant(x_q, w_q, row_scale, *, col_scale=None,
+                        transpose_w=False, out_dtype=jnp.bfloat16):
     dims = (((1,), (1,)), ((), ())) if transpose_w else (((1,), (0,)), ((), ()))
     acc = jax.lax.dot_general(x_q, w_q, dimension_numbers=dims,
                               preferred_element_type=jnp.int32)
-    return (acc.astype(jnp.float32) * row_scale).astype(out_dtype)
+    scale = row_scale if col_scale is None else row_scale * col_scale
+    return (acc.astype(jnp.float32) * scale).astype(out_dtype)
 
 
 def fused_switchback_fwd(x, w_q, s_w, *, out_dtype=jnp.bfloat16):
     x_q, s_x = row_quantize(x)
     scale = s_x * (s_w.reshape(()) / (127.0 * 127.0))
     return int8_matmul_dequant(x_q, w_q, scale, out_dtype=out_dtype)
+
+
+def fused_switchback_dgrad(g, w_q, s_w, *, out_dtype=jnp.bfloat16):
+    g_q, s_g = row_quantize(g)
+    scale = s_g * (s_w.reshape(()) / (127.0 * 127.0))
+    return int8_matmul_dequant(g_q, w_q, scale, transpose_w=True,
+                               out_dtype=out_dtype)
 
 
 def wgrad_bf16(x, g):

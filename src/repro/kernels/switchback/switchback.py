@@ -68,6 +68,43 @@ def row_quantize(x: jax.Array, *, block_b: int = 256,
 
 
 # ---------------------------------------------------------------------------
+# column-wise quantize kernel: x (R, C) -> q (R, C) int8, state (1, C) f32
+# (per-output-unit W scales of SwitchBackQ / LLM.int8, paper Eq. 4)
+# ---------------------------------------------------------------------------
+
+def _col_quantize_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x), axis=0, keepdims=True)
+    absmax = jnp.maximum(absmax, 1e-12)
+    q_ref[...] = jnp.round(x * (127.0 / absmax)).astype(jnp.int8)
+    s_ref[...] = absmax
+
+
+def col_quantize(x: jax.Array, *, block_c: int = 256,
+                 interpret: bool = False):
+    """Column-wise int8 quantization: one scale per column. Each grid step
+    owns `block_c` full columns so the column absmax reduction is local to
+    one VMEM block (R must fit VMEM, like K in row_quantize)."""
+    R, C = x.shape
+    block_c = min(block_c, C)
+    grid = (pl.cdiv(C, block_c),)
+    return pl.pallas_call(
+        _col_quantize_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((R, block_c), lambda j: (0, j))],
+        out_specs=[
+            pl.BlockSpec((R, block_c), lambda j: (0, j)),
+            pl.BlockSpec((1, block_c), lambda j: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, C), jnp.int8),
+            jax.ShapeDtypeStruct((1, C), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+
+
+# ---------------------------------------------------------------------------
 # tensor-wise quantize kernel (two-pass absmax then cast)
 # ---------------------------------------------------------------------------
 
@@ -136,8 +173,30 @@ def _int8_matmul_dequant_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *,
         o_ref[...] = (acc_ref[...].astype(jnp.float32) * s_ref[...]).astype(out_dtype)
 
 
+def _int8_matmul_dequant_colscale_kernel(x_ref, w_ref, s_ref, c_ref, o_ref,
+                                         acc_ref, *, n_k: int,
+                                         transpose_w: bool, out_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    dims = (((1,), (1,)), ((), ())) if transpose_w else (((1,), (0,)), ((), ()))
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...], dimension_numbers=dims,
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        # rank-1 dequantize: per-row AND per-output-column scales (Eq. 4)
+        o_ref[...] = (acc_ref[...].astype(jnp.float32)
+                      * (s_ref[...] * c_ref[...])).astype(out_dtype)
+
+
 def int8_matmul_dequant(x_q: jax.Array, w_q: jax.Array, row_scale: jax.Array,
-                        *, transpose_w: bool = False,
+                        *, col_scale: jax.Array | None = None,
+                        transpose_w: bool = False,
                         out_dtype=jnp.bfloat16,
                         block_b: int = 256, block_m: int = 256,
                         block_k: int = 512, interpret: bool = False):
@@ -147,6 +206,10 @@ def int8_matmul_dequant(x_q: jax.Array, w_q: jax.Array, row_scale: jax.Array,
     row_scale: (B, 1) f32 — the combined scale s_x * s_w / 127² (tensor-wise
     weight scale pre-folded by the caller, so the epilogue is one broadcast
     multiply).
+    col_scale: optional (1, M) f32 for column-wise weight states (SwitchBackQ
+    / LLM.int8, paper Eq. 4) — the epilogue becomes a rank-1 scale
+    row_scale ⊗ col_scale; the weight scale then rides here instead of being
+    folded into row_scale.
     """
     B, K = x_q.shape
     M = w_q.shape[0] if transpose_w else w_q.shape[1]
@@ -161,22 +224,31 @@ def int8_matmul_dequant(x_q: jax.Array, w_q: jax.Array, row_scale: jax.Array,
     else:
         w_spec = pl.BlockSpec((block_k, block_m), lambda i, j, k: (k, j))
 
-    kernel = functools.partial(
-        _int8_matmul_dequant_kernel, n_k=n_k, transpose_w=transpose_w,
-        out_dtype=out_dtype)
+    in_specs = [
+        pl.BlockSpec((block_b, block_k), lambda i, j, k: (i, k)),
+        w_spec,
+        pl.BlockSpec((block_b, 1), lambda i, j, k: (i, 0)),
+    ]
+    operands = [x_q, w_q, row_scale]
+    if col_scale is None:
+        kernel = functools.partial(
+            _int8_matmul_dequant_kernel, n_k=n_k, transpose_w=transpose_w,
+            out_dtype=out_dtype)
+    else:
+        kernel = functools.partial(
+            _int8_matmul_dequant_colscale_kernel, n_k=n_k,
+            transpose_w=transpose_w, out_dtype=out_dtype)
+        in_specs.append(pl.BlockSpec((1, block_m), lambda i, j, k: (0, j)))
+        operands.append(col_scale)
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_b, block_k), lambda i, j, k: (i, k)),
-            w_spec,
-            pl.BlockSpec((block_b, 1), lambda i, j, k: (i, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_b, block_m), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((B, M), out_dtype),
         scratch_shapes=[pltpu.VMEM((block_b, block_m), jnp.int32)],
         interpret=interpret,
-    )(x_q, w_q, row_scale)
+    )(*operands)
 
 
 # ---------------------------------------------------------------------------
@@ -219,6 +291,53 @@ def fused_switchback_fwd(x: jax.Array, w_q: jax.Array, s_w: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((B, M), out_dtype),
         interpret=interpret,
     )(x, w_q, s_w.reshape(1, 1))
+
+
+# ---------------------------------------------------------------------------
+# fused row-quantize + int8 dgrad matmul (M fits one VMEM block)
+#   dx[b, n] = s_g[b] * s_w/127² * sum_m q_row(g)[b, m] * w_q[n, m]
+# ---------------------------------------------------------------------------
+
+def _fused_switchback_dgrad_kernel(g_ref, w_ref, sw_ref, o_ref, *, out_dtype):
+    g = g_ref[...].astype(jnp.float32)
+    absmax = jnp.maximum(jnp.max(jnp.abs(g), axis=-1, keepdims=True), 1e-12)
+    g_q = jnp.round(g * (127.0 / absmax)).astype(jnp.int8)
+    # contract over m = dim 1 of BOTH operands (w_q stays (n, m) exactly as
+    # the forward quantized it — no transpose is ever materialized; the MXU
+    # contracts arbitrary dimension pairs, unlike cuBLAS int8's ABᵀ)
+    acc = jax.lax.dot_general(
+        g_q, w_ref[...], dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    scale = absmax * (sw_ref[0, 0] / (127.0 * 127.0))
+    o_ref[...] = (acc.astype(jnp.float32) * scale).astype(out_dtype)
+
+
+def fused_switchback_dgrad(g: jax.Array, w_q: jax.Array, s_w: jax.Array, *,
+                           out_dtype=jnp.bfloat16, block_b: int = 256,
+                           block_n: int = 512, interpret: bool = False):
+    """Input-grad SwitchBack with the Ẏ row-quantize fused into the matmul
+    kernel — one HBM read of Ẏ total, reusing the forward's int8 W and
+    tensor-wise scale. Requires the full contraction dim M (the layer's
+    output width) in one block; used when M ≤ ~2048."""
+    B, M = g.shape
+    N = w_q.shape[0]
+    block_b = min(block_b, B)
+    block_n = min(block_n, N)
+    grid = (pl.cdiv(B, block_b), pl.cdiv(N, block_n))
+    kernel = functools.partial(_fused_switchback_dgrad_kernel,
+                               out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, M), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, M), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, N), out_dtype),
+        interpret=interpret,
+    )(g, w_q, s_w.reshape(1, 1))
 
 
 # ---------------------------------------------------------------------------

@@ -60,6 +60,12 @@ from repro.optim import stable_adamw
 from repro.train.train_step import TrainState, make_train_step, make_train_setup
 
 
+def _set_mesh(mesh):
+    """jax.set_mesh appeared in jax 0.5; older jax uses the Mesh itself as
+    the context manager with identical scoping semantics."""
+    return jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
+
+
 # ---------------------------------------------------------------------------
 # per-arch parallel runbook (what makes each model FIT; see DESIGN.md §6)
 # ---------------------------------------------------------------------------
@@ -137,8 +143,17 @@ def _shard_ctx(mesh, par):
                         moe_grouped=par.moe_grouped)
 
 
-def metrics_of(compiled, n_devices: int) -> Dict[str, float]:
+def _cost_analysis(compiled) -> Dict[str, float]:
+    """compiled.cost_analysis() returns one dict in jax >= 0.5 but a
+    one-per-device list in 0.4.x — normalize to the dict."""
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
+def metrics_of(compiled, n_devices: int) -> Dict[str, float]:
+    ca = _cost_analysis(compiled)
     hlo = compiled.as_text()
     colls = collective_summary(hlo, n_devices)
     dots = count_dot_flops_by_dtype(hlo)
@@ -239,7 +254,8 @@ def run_train_cell(arch, cfg, shape, mesh, par, n_micro, policy, probes=True):
     params_abs = abstract_params(specs)
     params_shard = specs_to_shardings(specs, mesh, rules)
 
-    tc = TrainConfig(microbatch_steps=n_micro, quant_mode=policy.mode)
+    tc = TrainConfig(microbatch_steps=n_micro, quant_mode=policy.mode,
+                     kernel_backend=policy.backend)
     opt, scaler = make_train_setup(tc)
     step_fn = make_train_step(bundle, policy, par, tc, opt, scaler)
 
@@ -262,7 +278,7 @@ def run_train_cell(arch, cfg, shape, mesh, par, n_micro, policy, probes=True):
     in_shard = batch_shardings(inputs, mesh, rules)
 
     parts = []
-    with jax.set_mesh(mesh), _shard_ctx(mesh, par):
+    with _set_mesh(mesh), _shard_ctx(mesh, par):
         f = jax.jit(step_fn, in_shardings=(state_shard, in_shard),
                     donate_argnums=(0,))
         t0 = time.time()
@@ -271,7 +287,7 @@ def run_train_cell(arch, cfg, shape, mesh, par, n_micro, policy, probes=True):
         compile_s = time.time() - t0
         print(f"  [full] compiled in {compile_s:.1f}s")
         print("  memory:", compiled.memory_analysis())
-        ca = compiled.cost_analysis()
+        ca = _cost_analysis(compiled)
         print("  cost: flops/dev=%.3e bytes/dev=%.3e" % (
             ca.get("flops", 0), ca.get("bytes accessed", 0)))
         parts.append(("full", 1, metrics_of(compiled, mesh.size)))
@@ -323,7 +339,7 @@ def train_probes(arch, cfg, shape, mesh, par, n_micro, policy, rules,
             return jax.grad(lambda p: bundle.loss_fn(
                 p, mb, policy, par)[0])(params)
 
-        with jax.set_mesh(mesh), _shard_ctx(mesh, par):
+        with _set_mesh(mesh), _shard_ctx(mesh, par):
             c = jax.jit(micro, in_shardings=(params_shard, mb_shard)) \
                 .lower(params_abs, mb_inputs).compile()
         parts.append(("micro", n_micro - 1, metrics_of(c, mesh.size)))
@@ -365,7 +381,7 @@ def train_probes(arch, cfg, shape, mesh, par, n_micro, policy, rules,
                     f = TF._maybe_remat(f, par)
                     return jax.grad(f, argnums=(0, 1))(gp, x)
                 args, shards = (gp_abs, x_abs), (gp_shard, act_sh)
-            with jax.set_mesh(mesh), _shard_ctx(mesh, par):
+            with _set_mesh(mesh), _shard_ctx(mesh, par):
                 c = jax.jit(probe, in_shardings=shards).lower(*args).compile()
             parts.append((which, count * max(n_micro, 1),
                           metrics_of(c, mesh.size)))
@@ -387,7 +403,7 @@ def train_probes(arch, cfg, shape, mesh, par, n_micro, policy, rules,
             f = TF._maybe_remat(f, par)
             return jax.grad(f, argnums=(0, 1))(gp, x)
 
-        with jax.set_mesh(mesh), _shard_ctx(mesh, par):
+        with _set_mesh(mesh), _shard_ctx(mesh, par):
             c = jax.jit(probe, in_shardings=(gp_shard, act_sh)) \
                 .lower(gp_abs, x_abs).compile()
         parts.append(("group", (G - 1) * max(n_micro, 1),
@@ -420,7 +436,7 @@ def clip_probes(cfg: CLIPConfig, mesh, par, policy, rules):
             f = TF._maybe_remat(f, par)
             return jax.grad(f, argnums=(0, 1))(gp, x)
 
-        with jax.set_mesh(mesh), _shard_ctx(mesh, par):
+        with _set_mesh(mesh), _shard_ctx(mesh, par):
             c = jax.jit(probe, in_shardings=(gp_shard, x_sh)) \
                 .lower(gp_abs, x_abs).compile()
         parts.append((name, L - 1, metrics_of(c, mesh.size)))
@@ -439,7 +455,7 @@ def run_serve_cell(arch, cfg, shape, mesh, par, policy, probes=True):
     B, S = shape.global_batch, shape.seq_len
     parts = []
 
-    with jax.set_mesh(mesh), _shard_ctx(mesh, par):
+    with _set_mesh(mesh), _shard_ctx(mesh, par):
         if shape.kind == "prefill":
             if cfg.family == "encdec":
                 def prefill(params, batch):
@@ -553,7 +569,7 @@ def serve_group_probe(cfg, shape, mesh, par, policy, rules, *, decode):
             out, ns, _ = TF.group_apply(x, gp, cfg, policy, par,
                                         positions=jnp.arange(1), states=st)
             return out, ns
-        with jax.set_mesh(mesh), _shard_ctx(mesh, par):
+        with _set_mesh(mesh), _shard_ctx(mesh, par):
             c = jax.jit(probe, in_shardings=(gp_shard, st_shard, x_sh),
                         donate_argnums=(1,)) \
                 .lower(gp_abs, st_abs, x_abs).compile()
@@ -569,7 +585,7 @@ def serve_group_probe(cfg, shape, mesh, par, policy, rules, *, decode):
             out, _, _ = TF.group_apply(x, gp, cfg, policy, par,
                                        positions=positions)
             return out
-        with jax.set_mesh(mesh), _shard_ctx(mesh, par):
+        with _set_mesh(mesh), _shard_ctx(mesh, par):
             c = jax.jit(probe, in_shardings=(gp_shard, x_sh)) \
                 .lower(gp_abs, x_abs).compile()
     return [("group", G - 1, metrics_of(c, mesh.size))]
@@ -592,7 +608,7 @@ def count_params(specs, active_only_cfg=None) -> float:
 def active_params(cfg, specs) -> float:
     """N_active: expert params scaled by top_k/n_experts."""
     total = 0.0
-    flat = jax.tree.leaves_with_path(specs, is_leaf=PRM.is_spec)
+    flat = jax.tree_util.tree_leaves_with_path(specs, is_leaf=PRM.is_spec)
     moe = getattr(cfg, "moe", None)
     for path, leaf in flat:
         n = 1.0
@@ -630,7 +646,8 @@ def cell_model_flops(arch, cfg, shape) -> float:
 # ---------------------------------------------------------------------------
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
-             quant_mode: str = "bf16", probes: bool = True,
+             quant_mode: str = "bf16", kernel_backend: str = "xla",
+             probes: bool = True,
              overrides: Optional[Dict] = None, optimized: bool = False) -> Dict:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
@@ -645,7 +662,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         overrides["fsdp_gather_weights"] = False
     par, n_micro = parallel_for(arch, multi_pod, overrides)
     mesh = make_production_mesh(multi_pod=multi_pod)
-    policy = QuantPolicy(quant_mode)
+    policy = QuantPolicy(quant_mode, backend=kernel_backend)
     mesh_name = "2x16x16" if multi_pod else "16x16"
     print(f"=== {arch} × {shape_name} × {mesh_name} "
           f"(quant={quant_mode}, fsdp={par.fsdp}, n_micro={n_micro}) ===")
@@ -686,6 +703,8 @@ def main():
                     choices=["single", "multi", "both"])
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--quant-mode", default="bf16")
+    ap.add_argument("--kernel-backend", default="xla",
+                    choices=("xla", "pallas", "pallas_interpret"))
     ap.add_argument("--no-probes", action="store_true")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--fsdp", default=None, choices=[None, "on", "off"])
@@ -740,6 +759,7 @@ def main():
                 try:
                     row = run_cell(arch, shape.name, mp,
                                    quant_mode=args.quant_mode,
+                                   kernel_backend=args.kernel_backend,
                                    probes=not args.no_probes and not mp,
                                    overrides=overrides or None,
                                    optimized=args.optimized)

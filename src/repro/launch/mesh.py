@@ -9,7 +9,18 @@ traffic is the once-per-step gradient reduction.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 names explicit/auto mesh axis types
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - older jax: all axes are Auto
+    AxisType = None
+
+
+def _make_mesh(shape, axes):
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -25,11 +36,9 @@ def make_production_mesh(*, multi_pod: bool = False):
         shape = (2, 2, 2) if multi_pod else (2, have // 2)
         print(f"[mesh] only {have} devices — using reduced test mesh "
               f"{shape} {axes}")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CI-style sharding tests (8 fake devices)."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)

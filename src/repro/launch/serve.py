@@ -26,6 +26,8 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--quant-mode", default="bf16")
+    ap.add_argument("--kernel-backend", default="xla",
+                    choices=("xla", "pallas", "pallas_interpret"))
     args = ap.parse_args()
 
     cfg = get_reduced_config(args.arch)
@@ -33,7 +35,7 @@ def main():
         raise SystemExit("use examples/serve_lm.py for decoder-only archs; "
                          "enc-dec serving lives in repro.models.encdec")
     par = ParallelConfig(remat="none")
-    pol = QuantPolicy(args.quant_mode)
+    pol = QuantPolicy(args.quant_mode, backend=args.kernel_backend)
     params = init_params(build(cfg).param_specs, jax.random.PRNGKey(0))
     B = args.batch
     max_len = args.prompt_len + args.new_tokens

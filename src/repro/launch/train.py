@@ -59,6 +59,8 @@ def main():
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--quant-mode", default="bf16")
+    ap.add_argument("--kernel-backend", default="xla",
+                    choices=("xla", "pallas", "pallas_interpret"))
     ap.add_argument("--optimizer", default="stable_adamw")
     ap.add_argument("--beta2", type=float, default=0.95)
     ap.add_argument("--loss-scaler", default="none")
@@ -74,9 +76,10 @@ def main():
                      total_steps=args.steps, beta2=args.beta2,
                      loss_scaler=args.loss_scaler,
                      quant_mode=args.quant_mode,
+                     kernel_backend=args.kernel_backend,
                      microbatch_steps=args.microbatch)
     par = ParallelConfig(remat="block")
-    policy = QuantPolicy(args.quant_mode)
+    policy = QuantPolicy.from_train_config(tc)
     opt, scaler = make_train_setup(tc)
     step_fn = jax.jit(make_train_step(bundle, policy, par, tc, opt, scaler))
     state = init_train_state(params, opt, scaler)

@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import switchback as SB
-from repro.core.precision import QuantPolicy
+from repro.core.precision import QuantPolicy, variant_for_mode
 from repro.models import params as PRM
 from repro.models.common import activation
 
@@ -43,15 +43,13 @@ def expert_linear(x: Array, w: Array, policy: QuantPolicy) -> Array:
     """Batched expert matmul: x (E, C, din) @ w (E, din, dout).
 
     Quantized modes vmap the SwitchBack custom_vjp over E — per-expert
-    tensor-wise weight scales, per-row activation scales."""
+    tensor-wise weight scales, per-row activation scales. The policy's
+    kernel backend applies here too: Pallas kernels batch over E via the
+    pallas_call vmap rule (one extra leading grid dimension)."""
     if policy.is_quantized:
-        variant = {"int8_switchback": "switchback",
-                   "int8_switchback_m": "switchback_m",
-                   "int8_switchback_q": "switchback_q",
-                   "int8_llm": "llm_int8",
-                   "fp8_sim": "fp8_sim",
-                   "fp8_switchback": "fp8_switchback"}[policy.mode]
-        f = SB.make_switchback_matmul(variant, policy.fwd_fmt, policy.bwd_fmt)
+        f = SB.make_switchback_matmul(variant_for_mode(policy.mode),
+                                      policy.fwd_fmt, policy.bwd_fmt,
+                                      policy.backend)
         return jax.vmap(f)(x.astype(policy.compute_dtype),
                            w.astype(jnp.float32))
     cd = policy.compute_dtype

@@ -1,0 +1,65 @@
+"""Tiny deterministic parameter-sweep helper — an in-repo stand-in for
+``hypothesis.given`` (not installed in this container).
+
+Usage::
+
+    from sweeps import sweep, integers, floats
+
+    @sweep(n_cases=15, b=integers(1, 64), k=integers(8, 256))
+    def test_foo(b, k):
+        ...
+
+expands to ``pytest.mark.parametrize`` over ``n_cases`` deterministically seeded
+samples. The first two cases always pin every parameter at its lower /
+upper bound (the edge cases hypothesis shrinks toward); the rest are
+pseudo-random draws from a generator seeded by the parameter names, so
+runs are reproducible across processes and machines (``random.Random``
+seeds strings via sha512, independent of ``PYTHONHASHSEED``).
+"""
+from __future__ import annotations
+
+import math
+import random
+
+import pytest
+
+
+class Strategy:
+    """A closed-interval sampling strategy for one parameter."""
+
+    def __init__(self, lo, hi, kind: str):
+        assert lo <= hi, (lo, hi)
+        self.lo, self.hi, self.kind = lo, hi, kind
+
+    def sample(self, rng: random.Random):
+        if self.kind == "int":
+            return rng.randint(self.lo, self.hi)
+        # log-uniform when the range spans decades (scales, tolerances):
+        # uniform sampling would almost never produce small magnitudes
+        if self.lo > 0 and self.hi / self.lo >= 100.0:
+            return math.exp(rng.uniform(math.log(self.lo), math.log(self.hi)))
+        return rng.uniform(self.lo, self.hi)
+
+
+def integers(lo: int, hi: int) -> Strategy:
+    return Strategy(lo, hi, "int")
+
+
+def floats(lo: float, hi: float) -> Strategy:
+    return Strategy(lo, hi, "float")
+
+
+def sweep(n_cases: int = 20, seed: str = "sweep", **strategies: Strategy):
+    """Decorator: parametrize the test over ``n_cases`` deterministic
+    samples of the keyword strategies (plus the all-lo / all-hi edges)."""
+    names = tuple(strategies)
+    assert names, "sweep() needs at least one strategy"
+    rng = random.Random(f"{seed}:{':'.join(names)}")
+    cases = [tuple(s.lo for s in strategies.values()),
+             tuple(s.hi for s in strategies.values())]
+    while len(cases) < n_cases:
+        cases.append(tuple(s.sample(rng) for s in strategies.values()))
+    cases = cases[:n_cases]
+    if len(names) == 1:               # parametrize wants scalars, not 1-tuples
+        cases = [c[0] for c in cases]
+    return pytest.mark.parametrize(",".join(names), cases)

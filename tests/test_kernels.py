@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from sweeps import integers, sweep
 
 from repro.kernels.switchback import ops as K
 from repro.kernels.switchback import ref as R
@@ -99,8 +99,7 @@ def test_fp8_cast_kernel_sweep(fmt, rows):
     assert np.all(np.abs(a_np - c_np) <= step + 1e-12)
 
 
-@given(b=st.integers(1, 64), k=st.integers(8, 256), m=st.integers(1, 64))
-@settings(max_examples=15, deadline=None)
+@sweep(n_cases=15, b=integers(1, 64), k=integers(8, 256), m=integers(1, 64))
 def test_property_kernel_matches_ref_random_shapes(b, k, m):
     x = jax.random.normal(jax.random.PRNGKey(b * 7 + k + m), (b, k),
                           jnp.bfloat16)

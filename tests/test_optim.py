@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from sweeps import floats, sweep
 
 from repro.optim import (adafactor, adamw, beta2_warmup, clip_by_global_norm,
                          make_scaler, stable_adamw, warmup_cosine)
@@ -163,8 +163,7 @@ class TestSchedules:
         np.testing.assert_allclose(float(sched(100)), 1 - 100 ** -0.5,
                                    rtol=1e-6)
 
-    @given(norm=st.floats(0.1, 100.0))
-    @settings(max_examples=20, deadline=None)
+    @sweep(n_cases=20, norm=floats(0.1, 100.0))
     def test_property_clip_bounds_norm(self, norm):
         g = {"w": jnp.full((16,), norm / 4.0)}
         clipped, pre = clip_by_global_norm(g, 1.0)

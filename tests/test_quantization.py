@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from sweeps import floats, integers, sweep
 
 from repro.core import quantization as Q
 from repro.core import fp8 as F8
@@ -56,16 +56,14 @@ class TestInt8Quantizers:
         rel = np.abs(np.asarray(out - ref)).max() / np.abs(np.asarray(ref)).max()
         assert rel < 0.03
 
-    @given(b=st.integers(1, 16), n=st.integers(1, 64))
-    @settings(max_examples=20, deadline=None)
+    @sweep(n_cases=20, b=integers(1, 16), n=integers(1, 64))
     def test_property_quantized_values_in_range(self, b, n):
         x = jax.random.normal(jax.random.PRNGKey(b * 131 + n), (b, n)) * 100
         q, s = Q.quantize_rowwise(x)
         qv = np.asarray(q, np.int32)
         assert qv.min() >= -127 and qv.max() <= 127
 
-    @given(scale=st.floats(1e-4, 1e4))
-    @settings(max_examples=20, deadline=None)
+    @sweep(n_cases=20, scale=floats(1e-4, 1e4))
     def test_property_scale_invariance(self, scale):
         """Q_row(c·x) == Q_row(x): row-wise quant is scale-invariant."""
         x = jax.random.normal(key, (8, 32))
@@ -97,8 +95,7 @@ class TestFP8:
         y = np.asarray(Q.fp8_cast(x, "e4m3"))
         np.testing.assert_allclose(y, [448.0, -448.0])
 
-    @given(v=st.floats(-440.0, 440.0, allow_nan=False))
-    @settings(max_examples=50, deadline=None)
+    @sweep(n_cases=50, v=floats(-440.0, 440.0))
     def test_property_rounding_error_bound(self, v):
         x = jnp.asarray([v], jnp.float32)
         y = F8.fp8_round(x, F8.E4M3)

@@ -106,10 +106,8 @@ class TestCheckpoint:
 
 
 class TestTrainerEndToEnd:
-    def _setup(self, tmp_path=None, n_steps=8):
-        cfg = get_reduced_config("smollm-360m")
-        bundle = build(cfg)
-        params = init_params(bundle.param_specs, KEY)
+    def _setup(self, reduced, tmp_path=None, n_steps=8):
+        cfg, bundle, params = reduced("smollm-360m")
         tc = TrainConfig(optimizer="stable_adamw", learning_rate=3e-3,
                          warmup_steps=5, total_steps=1000, beta2=0.95,
                          loss_scaler="none", microbatch_steps=1)
@@ -126,33 +124,31 @@ class TestTrainerEndToEnd:
 
         return cfg, step_fn, state, batch_at
 
-    def test_loss_decreases(self):
-        _, step_fn, state, batch_at = self._setup()
+    def test_loss_decreases(self, reduced):
+        _, step_fn, state, batch_at = self._setup(reduced)
         losses = []
         for i in range(40):
             state, m = step_fn(state, batch_at(i))
             losses.append(float(m["loss"]))
         assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.5
 
-    def test_trainer_loop_with_checkpoint_resume(self, tmp_path):
-        _, step_fn, state, batch_at = self._setup()
+    def test_trainer_loop_with_checkpoint_resume(self, tmp_path, reduced):
+        _, step_fn, state, batch_at = self._setup(reduced)
         tr = Trainer(step_fn, state, checkpoint_dir=str(tmp_path),
                      checkpoint_every=4, log_every=0)
         tr.run(lambda i: batch_at(i), 8)
         assert tr.ckpt.latest_step() == 8
         # simulate crash + restart
-        _, step_fn2, state2, _ = self._setup()
+        _, step_fn2, state2, _ = self._setup(reduced)
         tr2 = Trainer(step_fn2, state2, checkpoint_dir=str(tmp_path),
                       log_every=0)
         start = tr2.maybe_resume()
         assert start == 8
         assert int(tr2.state.step) == 8
 
-    def test_microbatch_equals_full_batch(self):
+    def test_microbatch_equals_full_batch(self, reduced):
         """Gradient accumulation over 2 microbatches == one 2x batch."""
-        cfg = get_reduced_config("smollm-360m")
-        bundle = build(cfg)
-        params = init_params(bundle.param_specs, KEY)
+        cfg, bundle, params = reduced("smollm-360m")
         par = ParallelConfig(remat="none")
         pol = QuantPolicy("bf16", compute_dtype=jnp.float32)
         batch = {"tokens": jax.random.randint(KEY, (4, 16), 0,
@@ -165,7 +161,7 @@ class TestTrainerEndToEnd:
                              learning_rate=0.0, warmup_steps=1,
                              total_steps=10)
             opt, scaler = make_train_setup(tc)
-            fn = make_train_step(bundle, pol, par, tc, opt, scaler)
+            fn = jax.jit(make_train_step(bundle, pol, par, tc, opt, scaler))
             st = init_train_state(params, opt, scaler)
             st2, m = fn(st, batch)
             return m["loss"]

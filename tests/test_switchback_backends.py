@@ -1,0 +1,183 @@
+"""Kernel-parity harness for the SwitchBack backend dispatch (the ISSUE's
+acceptance bar): for every variant, ``backend="pallas_interpret"`` must
+agree with ``backend="xla"`` on the forward and BOTH gradients, including
+shapes that are not multiples of the kernel block sizes (the padding path).
+
+The int8 quantize→matmul integer math is identical on both paths, so the
+only admissible difference is float-associativity in the dequant scale
+folding — tolerances are per-dtype and tight.
+
+Plus: gradient-correctness of the new fused dgrad kernel against the
+pure-jnp oracle in kernels/switchback/ref.py across a non-block-multiple
+shape sweep.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from sweeps import integers, sweep
+
+from repro.core import switchback as SB
+from repro.core.precision import QuantPolicy, quant_linear
+from repro.kernels.switchback import ops as K
+from repro.kernels.switchback import ref as R
+
+key = jax.random.PRNGKey(11)
+kx, kw, kg = jax.random.split(key, 3)
+
+# block sizes in play: row/tensor-quantize 256/512 rows, matmul blocks from
+# choose_blocks (>=256), fused kernels 256×512. Shapes below hit: aligned,
+# every-dim-odd (padding), B > one block, and both fused/two-step branches
+# of the forward (K ≶ FUSED_MAX_CONTRACT) and dgrad (M ≶ FUSED_MAX_CONTRACT).
+PARITY_SHAPES = [
+    (64, 128, 96),        # small, MXU-friendly
+    (37, 130, 50),        # nothing aligned: padding on every dim
+    (300, 257, 129),      # B > block_b after padding, odd K/M
+    (8, 2100, 24),        # K > FUSED_MAX_CONTRACT: two-step forward
+    (8, 64, 2100),        # M > FUSED_MAX_CONTRACT: two-step dgrad
+]
+
+# per-output-dtype tolerance on max-abs relative error
+TOL = {jnp.bfloat16: 1.6e-2, jnp.float32: 1e-5}
+
+
+def _run(variant, backend, x, w, g):
+    f = SB.make_switchback_matmul(variant, backend=backend)
+    y, vjp = jax.vjp(f, x, w)
+    dx, dw = vjp(g)
+    return (np.asarray(y, np.float32), np.asarray(dx, np.float32),
+            np.asarray(dw, np.float32))
+
+
+def _assert_close(a, b, tol, what):
+    denom = np.abs(a).max() + 1e-9
+    rel = np.abs(a - b).max() / denom
+    assert rel <= tol, f"{what}: max rel err {rel:.3e} > {tol:.0e}"
+
+
+@pytest.mark.parametrize("shape", PARITY_SHAPES)
+@pytest.mark.parametrize("variant", SB.VARIANTS)
+def test_backend_parity_fwd_dx_dw(variant, shape):
+    b, n, m = shape
+    x = jax.random.normal(kx, (b, n), jnp.bfloat16)
+    w = jax.random.normal(kw, (n, m), jnp.float32) * 0.05
+    g = jax.random.normal(kg, (b, m), jnp.bfloat16)
+    ref = _run(variant, "xla", x, w, g)
+    got = _run(variant, "pallas_interpret", x, w, g)
+    for name, r, p, dt in zip(("y", "dx", "dw"), ref, got,
+                              (jnp.bfloat16, jnp.bfloat16, jnp.float32)):
+        _assert_close(r, p, TOL[dt], f"{variant} {shape} {name}")
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_backend_parity_respects_input_dtype(dtype):
+    """dx comes back in the activation dtype on both backends."""
+    x = jax.random.normal(kx, (37, 130), dtype)
+    w = jax.random.normal(kw, (130, 50), jnp.float32) * 0.05
+    g = jax.random.normal(kg, (37, 50), dtype)
+    for backend in ("xla", "pallas_interpret"):
+        f = SB.make_switchback_matmul("switchback", backend=backend)
+        y, vjp = jax.vjp(f, x, w)
+        dx, dw = vjp(g)
+        assert y.dtype == dtype and dx.dtype == dtype
+        assert dw.dtype == jnp.float32
+    _assert_close(*(
+        np.asarray(jax.vjp(SB.make_switchback_matmul(
+            "switchback", backend=be), x, w)[0], np.float32)
+        for be in ("xla", "pallas_interpret")),
+        TOL[dtype], f"fwd {dtype}")
+
+
+def test_fp8_variants_ignore_backend_exactly():
+    """No fp8 Pallas kernels exist: the backend knob must be a no-op (bit
+    identical), not a silent different code path."""
+    x = jax.random.normal(kx, (64, 96), jnp.bfloat16)
+    w = jax.random.normal(kw, (96, 32), jnp.float32) * 0.05
+    g = jax.random.normal(kg, (64, 32), jnp.bfloat16)
+    for variant in ("fp8_sim", "fp8_switchback"):
+        ref = _run(variant, "xla", x, w, g)
+        got = _run(variant, "pallas_interpret", x, w, g)
+        for name, r, p in zip(("y", "dx", "dw"), ref, got):
+            np.testing.assert_array_equal(r, p, err_msg=f"{variant} {name}")
+
+
+def test_quant_linear_threads_policy_backend():
+    """The single model entry point (precision.quant_linear) reaches the
+    kernels: 3-D input + bias, policy.backend=pallas_interpret ≈ xla."""
+    x = jax.random.normal(kx, (3, 13, 66), jnp.bfloat16)   # odd dims
+    w = jax.random.normal(kw, (66, 30), jnp.float32) * 0.1
+    b = jnp.ones((30,), jnp.float32)
+    ys = [np.asarray(quant_linear(
+        x, w, b, policy=QuantPolicy("int8_switchback", backend=be)),
+        np.float32) for be in ("xla", "pallas_interpret")]
+    assert ys[0].shape == (3, 13, 30)
+    _assert_close(ys[0], ys[1], TOL[jnp.bfloat16], "quant_linear 3d+bias")
+
+
+def test_vmapped_expert_backend_parity():
+    """MoE expert path: vmapped custom_vjp over E with Pallas kernels."""
+    E, C, d, ff = 3, 17, 40, 24                            # odd C/d/ff
+    xs = jax.random.normal(kx, (E, C, d), jnp.bfloat16)
+    ws = jax.random.normal(kw, (E, d, ff), jnp.float32) * 0.1
+    gs = jax.random.normal(kg, (E, C, ff), jnp.bfloat16)
+    outs = {}
+    for be in ("xla", "pallas_interpret"):
+        f = SB.make_switchback_matmul("switchback", backend=be)
+        y, vjp = jax.vjp(lambda x, w: jax.vmap(f)(x, w), xs, ws)
+        dx, dw = vjp(gs)
+        outs[be] = tuple(np.asarray(t, np.float32) for t in (y, dx, dw))
+    for name, r, p, dt in zip(("y", "dx", "dw"), outs["xla"],
+                              outs["pallas_interpret"],
+                              (jnp.bfloat16, jnp.bfloat16, jnp.float32)):
+        _assert_close(r, p, TOL[dt], f"vmap expert {name}")
+
+
+def test_backend_validation():
+    with pytest.raises(ValueError):
+        SB.make_switchback_matmul("switchback", backend="triton")
+    with pytest.raises(ValueError):
+        QuantPolicy("int8_switchback", backend="nope")
+
+
+# ---------------------------------------------------------------------------
+# fused dgrad kernel vs the ref.py oracle (new kernel in this PR)
+# ---------------------------------------------------------------------------
+
+@sweep(n_cases=10, b=integers(1, 513), n=integers(9, 300), m=integers(1, 200))
+def test_fused_dgrad_matches_oracle_shape_sweep(b, n, m):
+    """B, N, M deliberately not multiples of the (256, 512) fused blocks."""
+    g = jax.random.normal(jax.random.PRNGKey(b * 31 + n + m), (b, m),
+                          jnp.bfloat16)
+    w = jax.random.normal(kw, (n, m), jnp.float32) * 0.1
+    w_q, s_w = R.tensor_quantize(w)
+    dx = K.fused_switchback_dgrad(g, w_q, s_w, backend="pallas_interpret")
+    dxr = R.fused_switchback_dgrad(g, w_q, s_w)
+    # int8 math is exact; XLA may reassociate the epilogue's scale multiply
+    # differently between the two programs — allow one bf16 ulp
+    np.testing.assert_allclose(np.asarray(dx, np.float32),
+                               np.asarray(dxr, np.float32),
+                               rtol=2 ** -7, atol=1e-7)
+
+
+def test_fused_dgrad_equals_unfused_pipeline():
+    """The fused kernel must compute exactly quantize(g) → int8 matmul
+    (contract over m) → dequant, i.e. match the two-step kernel path."""
+    g = jax.random.normal(kg, (77, 130), jnp.bfloat16)
+    w = jax.random.normal(kw, (53, 130), jnp.float32) * 0.1
+    w_q, s_w = R.tensor_quantize(w)
+    fused = K.fused_switchback_dgrad(g, w_q, s_w, backend="pallas_interpret")
+    g_q, s_g = K.row_quantize(g, backend="pallas_interpret")
+    scale = s_g * (s_w.reshape(()) / (127.0 * 127.0))
+    twostep = K.int8_matmul_dequant(g_q, w_q, scale, transpose_w=True,
+                                    backend="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(fused, np.float32),
+                                  np.asarray(twostep, np.float32))
+
+
+@sweep(n_cases=8, r=integers(1, 300), c=integers(1, 300))
+def test_col_quantize_matches_oracle_shape_sweep(r, c):
+    x = jax.random.normal(jax.random.PRNGKey(r * 7 + c), (r, c), jnp.float32)
+    q, s = K.col_quantize(x, backend="pallas_interpret")
+    qr, sr = R.col_quantize(x)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)

@@ -10,10 +10,12 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
+@pytest.mark.slow
 def test_train_crash_resume_is_deterministic(tmp_path):
     """Train 6 steps with checkpoints every 2; 'crash'; resume from step 4
     and verify the resumed trajectory matches an uninterrupted one."""
@@ -68,6 +70,7 @@ def test_train_crash_resume_is_deterministic(tmp_path):
                                rtol=2e-2, atol=2e-2)
 
 
+@pytest.mark.slow
 def test_sharded_dryrun_subprocess():
     """The dry-run machinery end-to-end on 8 fake devices in a subprocess
     (cannot run in-process: the test session owns a 1-device jax)."""
@@ -85,6 +88,7 @@ def test_sharded_dryrun_subprocess():
     assert row["bottleneck"] in ("compute", "memory", "collective")
 
 
+@pytest.mark.slow
 def test_compressed_gradient_allreduce_subprocess():
     """int8-compressed DP gradient sync (shard_map) on 8 fake devices:
     result ≈ exact mean within int8 quantization error."""
@@ -93,15 +97,20 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys; sys.path.insert(0, %r)
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import PartitionSpec as P, AxisType
+from jax.sharding import PartitionSpec as P
 from repro.distributed.compression import compressed_allreduce_mean, wire_bytes_saved
+try:
+    from jax import shard_map               # jax >= 0.6
+    smap_kw = {"check_vma": False}          # all_gather output is replicated
+except ImportError:
+    from jax.experimental.shard_map import shard_map
+    smap_kw = {"check_rep": False}
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+mesh = jax.make_mesh((8,), ("data",))
 g = jax.random.normal(jax.random.PRNGKey(0), (8, 64, 32), jnp.float32)
 
-f = jax.shard_map(lambda x: compressed_allreduce_mean(x[0], "data"),
-                  mesh=mesh, in_specs=P("data"), out_specs=P(),
-                  check_vma=False)   # all_gather output is replicated
+f = shard_map(lambda x: compressed_allreduce_mean(x[0], "data"),
+              mesh=mesh, in_specs=P("data"), out_specs=P(), **smap_kw)
 got = f(g)
 want = jnp.mean(g, axis=0)
 err = float(jnp.max(jnp.abs(got - want)))
