@@ -1,0 +1,100 @@
+"""Train-step throughput through the TrainEngine: steps/s for smollm-360m
+(reduced config — this is a CPU container) on a 1-device vs an N-device
+host mesh, with and without input-state donation.
+
+    PYTHONPATH=src python -m benchmarks.bench_train_step --devices 8 \
+        --steps 30 --out results/bench/train_step.json
+
+Donation lets XLA alias the params/opt-state buffers between steps
+(in-place update instead of allocate+copy); the no-donation rows quantify
+what that saves. N fake host devices share the same physical cores, so
+the N-device rows measure partitioning overhead, not real scaling.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# device count must be forced before any jax backend init
+from repro.host_devices import force_host_device_count
+force_host_device_count(default=8)
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced_config
+from repro.configs.base import ParallelConfig, TrainConfig
+from repro.data import BigramLM
+from repro.launch.mesh import make_test_mesh
+from repro.models import build
+from repro.train import make_engine
+
+
+def bench_row(arch: str, mesh, *, donate: bool, steps: int, batch: int,
+              seq: int, warmup: int = 3) -> dict:
+    cfg = get_reduced_config(arch)
+    tc = TrainConfig(learning_rate=1e-3, warmup_steps=2, total_steps=10_000,
+                     loss_scaler="none")
+    par = ParallelConfig(mesh_shape=tuple(mesh.devices.shape),
+                         mesh_axes=tuple(mesh.axis_names), remat="block")
+    d = BigramLM(cfg.vocab_size, seed=0, temperature=0.3)
+    engine = make_engine(build(cfg), tc, par, mesh, d.batch(batch, seq),
+                         donate=donate)
+    batches = [engine.shard_batch(jax.tree.map(jnp.asarray,
+                                               d.batch(batch, seq)))
+               for _ in range(4)]
+    state = engine.init_state()
+    for i in range(warmup):
+        state, m = engine.step(state, batches[i % len(batches)])
+    jax.block_until_ready(state)
+    t0 = time.perf_counter()
+    for i in range(steps):
+        state, m = engine.step(state, batches[i % len(batches)])
+    jax.block_until_ready(state)
+    dt = time.perf_counter() - t0
+    return {"bench": "train_step", "arch": arch, "devices": mesh.size,
+            "mesh": dict(zip(mesh.axis_names,
+                             (int(s) for s in mesh.devices.shape))),
+            "donate": donate, "batch": batch, "seq": seq, "steps": steps,
+            "steps_per_s": steps / dt, "wall_s": dt,
+            "final_loss": float(m["loss"])}
+
+
+def run(out_json: str | None = None, steps: int = 30, batch: int = 8,
+        seq: int = 64) -> list:
+    n = jax.device_count()
+    meshes = [make_test_mesh((1, 1))]
+    if n >= 2:
+        meshes.append(make_test_mesh((2, n // 2)))
+    rows = []
+    print(f"{'devices':>8} {'donate':>7} | {'steps/s':>8} {'wall_s':>7}")
+    for mesh in meshes:
+        for donate in (True, False):
+            row = bench_row("smollm-360m", mesh, donate=donate, steps=steps,
+                            batch=batch, seq=seq)
+            rows.append(row)
+            print(f"{row['devices']:>8} {str(donate):>7} | "
+                  f"{row['steps_per_s']:8.2f} {row['wall_s']:7.2f}")
+    if out_json:
+        os.makedirs(os.path.dirname(out_json) or ".", exist_ok=True)
+        with open(out_json, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=8,
+                    help="forced host device count (read pre-jax-import)")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--out", default=None)
+    a = ap.parse_args()
+    run(out_json=a.out, steps=a.steps, batch=a.batch, seq=a.seq)

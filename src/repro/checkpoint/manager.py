@@ -32,6 +32,23 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def _host_snapshot(tree):
+    """Device->host snapshot of a (possibly sharded) state tree.
+
+    Sharded jax.Arrays are fetched via jax.device_get on their addressable
+    data — one batched transfer, assembling the global array from local
+    shards; fully-replicated arrays copy a single shard instead of
+    gathering every replica. Host leaves pass through as numpy."""
+    def one(x):
+        if isinstance(x, jax.Array):
+            if getattr(x, "is_fully_replicated", False):
+                return np.asarray(x.addressable_data(0))
+            return x
+        return np.asarray(x)
+    tree = jax.tree.map(one, tree)
+    return jax.device_get(tree)
+
+
 def _flatten_with_paths(tree, prefix=""):
     out = []
     if isinstance(tree, dict):
@@ -73,13 +90,13 @@ class CheckpointManager:
     # ------------------------------------------------------------------ save
     def save(self, step: int, tree: Any, extra: Optional[Dict] = None):
         self.wait()
-        host_tree = jax.tree.map(np.asarray, tree)     # gather to host
+        host_tree = _host_snapshot(tree)               # gather to host
         self._write(step, host_tree, extra or {})
 
     def save_async(self, step: int, tree: Any, extra: Optional[Dict] = None):
         """Snapshot synchronously (device->host copy), write in background."""
         self.wait()
-        host_tree = jax.tree.map(np.asarray, tree)
+        host_tree = _host_snapshot(tree)
 
         def work():
             try:

@@ -28,7 +28,12 @@ class StragglerWatchdog:
         self._t0 = time.monotonic()
 
     def step_end(self, step: int) -> dict:
-        dt = time.monotonic() - self._t0
+        return self.record(step, time.monotonic() - self._t0)
+
+    def record(self, step: int, dt: float) -> dict:
+        """Feed an externally measured step time (e.g. the trainer's
+        amortized per-step wall time over an async-dispatch window —
+        individual step_end timings only see dispatch time there)."""
         self._n += 1
         slow = False
         if self.ema is not None and self._n > self.warmup_steps \

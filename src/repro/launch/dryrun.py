@@ -55,15 +55,14 @@ from repro.models import transformer as TF
 from repro.models import encdec as ED
 from repro.models.params import (ParamSpec, abstract_params, default_rules,
                                  logical_to_pspec, specs_to_shardings,
-                                 specs_to_pspecs, _divisible)
-from repro.optim import stable_adamw
-from repro.train.train_step import TrainState, make_train_step, make_train_setup
+                                 _divisible)
+from repro.train.engine import (batch_shardings, make_engine, make_shard_ctx,
+                                set_mesh)
 
-
-def _set_mesh(mesh):
-    """jax.set_mesh appeared in jax 0.5; older jax uses the Mesh itself as
-    the context manager with identical scoping semantics."""
-    return jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
+# mesh/sharding-context helpers now live in the engine (train/engine.py);
+# the serve cells and probes below use the same ones the train step does.
+_set_mesh = set_mesh
+_shard_ctx = make_shard_ctx
 
 
 # ---------------------------------------------------------------------------
@@ -131,17 +130,6 @@ def parallel_for(arch: str, multi_pod: bool, overrides: Optional[Dict] = None
 # ---------------------------------------------------------------------------
 # metrics extraction
 # ---------------------------------------------------------------------------
-
-def _shard_ctx(mesh, par):
-    """Trace-time sharding context: activates activation constraints and
-    (when par.fsdp_gather_weights) the explicit ZeRO-3 weight gathers."""
-    rules = default_rules(par)
-    nofsdp = PRM.nofsdp_rules(rules, rules.get("batch"))
-    return PRM.ShardCtx(mesh, rules, nofsdp,
-                        gather_fsdp=par.fsdp and par.fsdp_gather_weights,
-                        gather_wire=par.gather_wire,
-                        moe_grouped=par.moe_grouped)
-
 
 def _cost_analysis(compiled) -> Dict[str, float]:
     """compiled.cost_analysis() returns one dict in jax >= 0.5 but a
@@ -228,73 +216,33 @@ def input_specs(arch: str, shape: ShapeConfig, cfg) -> Dict[str, Any]:
     return out
 
 
-def batch_shardings(inputs, mesh, rules):
-    def one(v):
-        if v.ndim == 4:                       # images (B, H, W, C)
-            logical = ("batch", None, None, None)
-        elif v.ndim == 3:                     # embeddings (B, S, D)
-            logical = ("batch", "seq", None)
-        elif v.ndim == 2:
-            logical = ("batch", "seq")
-        else:
-            logical = ("batch",)
-        ps = _divisible(v.shape, logical_to_pspec(logical, rules), mesh)
-        return NamedSharding(mesh, ps)
-    return jax.tree.map(one, inputs)
-
-
 # ---------------------------------------------------------------------------
 # cell runners
 # ---------------------------------------------------------------------------
 
 def run_train_cell(arch, cfg, shape, mesh, par, n_micro, policy, probes=True):
-    rules = default_rules(par)
-    bundle = build(cfg)
-    specs = bundle.param_specs
-    params_abs = abstract_params(specs)
-    params_shard = specs_to_shardings(specs, mesh, rules)
-
+    """Thin wrapper over the TrainEngine: the engine owns state assembly
+    (param/opt/scaler shardings, donation, the jitted step); this path
+    lowers it abstractly and harvests compile metrics + cost probes."""
     tc = TrainConfig(microbatch_steps=n_micro, quant_mode=policy.mode,
                      kernel_backend=policy.backend)
-    opt, scaler = make_train_setup(tc)
-    step_fn = make_train_step(bundle, policy, par, tc, opt, scaler)
-
-    opt_abs = jax.eval_shape(opt.init, params_abs)
-    opt_shard = jax.tree.map(
-        lambda a: NamedSharding(mesh, P()), opt_abs)
-    # moments shard like their params
-    opt_shard = opt_shard._replace(
-        exp_avg=params_shard, exp_avg_sq=params_shard) \
-        if hasattr(opt_abs, "exp_avg") else opt_shard
-    scaler_abs = jax.eval_shape(scaler.init)
-    state_abs = TrainState(params_abs, opt_abs, scaler_abs,
-                           sds((), jnp.int32), sds((2,), jnp.uint32))
-    repl = NamedSharding(mesh, P())
-    state_shard = TrainState(
-        params_shard, opt_shard,
-        jax.tree.map(lambda a: repl, scaler_abs), repl, repl)
-
     inputs = input_specs(arch, shape, cfg)
-    in_shard = batch_shardings(inputs, mesh, rules)
+    eng = make_engine(cfg, tc, par, mesh, inputs, policy=policy)
 
-    parts = []
-    with _set_mesh(mesh), _shard_ctx(mesh, par):
-        f = jax.jit(step_fn, in_shardings=(state_shard, in_shard),
-                    donate_argnums=(0,))
-        t0 = time.time()
-        lowered = f.lower(state_abs, inputs)
-        compiled = lowered.compile()
-        compile_s = time.time() - t0
-        print(f"  [full] compiled in {compile_s:.1f}s")
-        print("  memory:", compiled.memory_analysis())
-        ca = _cost_analysis(compiled)
-        print("  cost: flops/dev=%.3e bytes/dev=%.3e" % (
-            ca.get("flops", 0), ca.get("bytes accessed", 0)))
-        parts.append(("full", 1, metrics_of(compiled, mesh.size)))
+    t0 = time.time()
+    compiled = eng.lower().compile()
+    compile_s = time.time() - t0
+    print(f"  [full] compiled in {compile_s:.1f}s")
+    print("  memory:", compiled.memory_analysis())
+    ca = _cost_analysis(compiled)
+    print("  cost: flops/dev=%.3e bytes/dev=%.3e" % (
+        ca.get("flops", 0), ca.get("bytes accessed", 0)))
+    parts = [("full", 1, metrics_of(compiled, mesh.size))]
 
-        if probes:
-            parts += train_probes(arch, cfg, shape, mesh, par, n_micro,
-                                  policy, rules, specs, params_shard)
+    if probes:
+        parts += train_probes(arch, cfg, shape, mesh, par, n_micro,
+                              policy, eng.rules, eng.specs,
+                              eng.param_shardings)
     return parts, compile_s
 
 

@@ -51,8 +51,9 @@ def main():
         tokens = jnp.argmax(logits[:, -1], -1)[:, None]
         n += B
     jax.block_until_ready(tokens)
-    print(f"{args.arch}: {n} tokens in {time.time()-t0:.2f}s "
-          f"({n/(time.time()-t0):.0f} tok/s, CPU, {args.quant_mode})")
+    dt = time.time() - t0
+    print(f"{args.arch}: {n} tokens in {dt:.2f}s "
+          f"({n/dt:.0f} tok/s, CPU, {args.quant_mode})")
 
 
 if __name__ == "__main__":

@@ -1,32 +1,36 @@
-"""Training launcher CLI.
+"""Training launcher CLI — every mode runs the same sharded TrainEngine.
 
-Two modes:
+* default (this CPU container): trains the reduced config of ``--arch`` on
+  synthetic data end-to-end through the engine on a mesh over the local
+  devices — the same jitted, donated, sharded step the production path and
+  the dry-run compile.
+* ``--mesh test`` with forced host devices exercises real partitioning:
 
-* ``--reduced`` (default on this CPU container): trains the reduced config
-  of ``--arch`` on synthetic data end-to-end — the same Trainer /
-  checkpoint / stability stack the production path uses.
-* full-size (``--reduced off`` on a real TPU slice): builds the production
-  mesh, shards params with the runbook rules, and runs the identical step
-  function. On this container full-size only makes sense via dryrun.py.
+    PYTHONPATH=src REPRO_DRYRUN_DEVICES=8 python -m repro.launch.train \
+        --arch smollm-360m --steps 20 --mesh test
 
-    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
-        --steps 100 --quant-mode int8_switchback
+* ``--mesh single|multi`` builds the production runbook meshes (shrunk
+  proportionally when fewer devices exist, as in the dry-run).
 """
 from __future__ import annotations
 
 import argparse
 
+from repro.host_devices import force_host_device_count
+
+# must run before the jax import below: REPRO_DRYRUN_DEVICES / --devices N
+force_host_device_count()
+
 import jax
 import jax.numpy as jnp
 
-from repro.configs import ALL_ARCHS, get_config, get_reduced_config
+from repro.configs import ALL_ARCHS, get_reduced_config
 from repro.configs.base import CLIPConfig, ParallelConfig, TrainConfig
 from repro.core.precision import QuantPolicy
 from repro.data import BigramLM, SyntheticCLIP, SyntheticSeq2Seq
+from repro.launch.mesh import make_production_mesh, make_test_mesh
 from repro.models import build
-from repro.models.params import init_params
-from repro.train import (Trainer, init_train_state, make_train_setup,
-                         make_train_step)
+from repro.train import Trainer, make_engine
 
 
 def make_data(cfg, batch: int, seq: int):
@@ -51,6 +55,25 @@ def make_data(cfg, batch: int, seq: int):
     return fn
 
 
+def make_mesh(kind: str):
+    """CLI mesh selection. ``auto`` data-parallels over whatever devices
+    exist (1 device => a degenerate (1,1) mesh — the sharded step is still
+    the step); ``test`` is the CI-style (2, n/2) mesh; ``single``/``multi``
+    are the production runbook meshes."""
+    n = jax.device_count()
+    if kind == "auto":
+        return make_test_mesh((n, 1))
+    if kind == "test":
+        assert n >= 2, "--mesh test needs >=2 devices (REPRO_DRYRUN_DEVICES)"
+        return make_test_mesh((2, n // 2))
+    # production meshes shrink to (2, n/2) / (2,2,2) when devices are few —
+    # below that the fallback itself is degenerate
+    need = 8 if kind == "multi" else 2
+    assert n >= need, (f"--mesh {kind} needs >={need} devices "
+                       "(use --devices N or REPRO_DRYRUN_DEVICES)")
+    return make_production_mesh(multi_pod=(kind == "multi"))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m", choices=ALL_ARCHS)
@@ -66,11 +89,23 @@ def main():
     ap.add_argument("--loss-scaler", default="none")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--mesh", default="auto",
+                    choices=("auto", "test", "single", "multi"))
+    ap.add_argument("--devices", type=int, default=None,
+                    help="force N host CPU devices (read pre-jax-import)")
+    ap.add_argument("--fsdp", action="store_true",
+                    help="shard params/moments over data too (ZeRO-3)")
+    ap.add_argument("--pure-dp", action="store_true",
+                    help="fold the model axis into data parallelism")
     args = ap.parse_args()
 
     cfg = get_reduced_config(args.arch)
     bundle = build(cfg)
-    params = init_params(bundle.param_specs, jax.random.PRNGKey(0))
+    mesh = make_mesh(args.mesh)
+    par = ParallelConfig(mesh_shape=tuple(mesh.devices.shape),
+                         mesh_axes=tuple(mesh.axis_names),
+                         fsdp=args.fsdp, pure_dp=args.pure_dp,
+                         remat="block")
     tc = TrainConfig(optimizer=args.optimizer, learning_rate=args.lr,
                      warmup_steps=max(args.steps // 10, 1),
                      total_steps=args.steps, beta2=args.beta2,
@@ -78,20 +113,31 @@ def main():
                      quant_mode=args.quant_mode,
                      kernel_backend=args.kernel_backend,
                      microbatch_steps=args.microbatch)
-    par = ParallelConfig(remat="block")
     policy = QuantPolicy.from_train_config(tc)
-    opt, scaler = make_train_setup(tc)
-    step_fn = jax.jit(make_train_step(bundle, policy, par, tc, opt, scaler))
-    state = init_train_state(params, opt, scaler)
     data_fn = make_data(cfg, args.batch, args.seq)
 
-    trainer = Trainer(step_fn, state, checkpoint_dir=args.ckpt_dir,
+    engine = make_engine(bundle, tc, par, mesh, data_fn(0), policy=policy)
+    state = engine.init_state(seed=0)
+    n_sharded = sum(not l.sharding.is_fully_replicated
+                    for l in jax.tree.leaves(state.params))
+    print(f"[train] mesh {dict(zip(mesh.axis_names, mesh.devices.shape))} "
+          f"fsdp={par.fsdp} pure_dp={par.pure_dp} — "
+          f"{n_sharded}/{len(jax.tree.leaves(state.params))} param tensors "
+          f"partitioned, step donated")
+
+    trainer = Trainer(engine.step, state, checkpoint_dir=args.ckpt_dir,
                       checkpoint_every=max(args.steps // 3, 10)
-                      if args.ckpt_dir else 0, log_every=10)
+                      if args.ckpt_dir else 0, log_every=10,
+                      state_shardings=engine.state_shardings)
     start = trainer.maybe_resume()
-    trainer.run(lambda i: data_fn(i), args.steps - start)
-    print("final loss:", trainer.history[-1]["loss"])
-    print("stability:", trainer.stability_report())
+    trainer.run(lambda i: engine.shard_batch(data_fn(i)),
+                args.steps - start)
+    if trainer.history:
+        print("final loss:", trainer.history[-1]["loss"])
+        print("stability:", trainer.stability_report())
+    else:
+        print(f"nothing to do: resumed at step {start} >= --steps "
+              f"{args.steps}")
 
 
 if __name__ == "__main__":

@@ -17,8 +17,9 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.optim.base import (Optimizer, Schedule, apply_skip_mask,
-                              constant_schedule, default_wd_mask)
+from repro.optim.base import (Optimizer, Schedule, _is_spec_like,
+                              apply_skip_mask, constant_schedule,
+                              default_wd_mask)
 
 
 class AdafactorState(NamedTuple):
@@ -102,4 +103,20 @@ def adafactor(learning_rate: float | Schedule = 2e-3,
         new_moments = apply_skip_mask(skip_mask, new_moments, state.moments)
         return new_params, AdafactorState(t, new_moments), {"lr": lr}
 
-    return Optimizer(init, update)
+    def state_logical_axes(param_specs):
+        # factored moments are row/col means of g²: vr drops the last
+        # logical axis, vc the second-to-last — each keeps the surviving
+        # axes' sharding (1-D pspecs for 2-D params).
+        def leaf(s):
+            lg = tuple(s.logical)
+            if _factored(s.shape):
+                m = {"vr": lg[:-1], "vc": lg[:-2] + lg[-1:]}
+            else:
+                m = {"v": lg}
+            if beta1 is not None:
+                m["m"] = lg
+            return m
+        return AdafactorState(step=(), moments=jax.tree.map(
+            leaf, param_specs, is_leaf=_is_spec_like))
+
+    return Optimizer(init, update, state_logical_axes)

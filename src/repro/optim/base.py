@@ -12,6 +12,12 @@ An Optimizer is a pair of pure functions:
   tensor, not the whole network.
 * ``aux`` is a dict of diagnostics (per-tensor RMS_t for the stability
   monitor, the global lr actually applied, etc.).
+* ``state_logical_axes(param_specs)`` maps a pytree of ParamSpec-like
+  leaves (anything with ``.shape`` and ``.logical``) to a tree matching
+  ``init``'s state structure whose leaves are logical-axis tuples — the
+  spec the train engine turns into per-leaf NamedShardings, so optimizer
+  state shards like (or derived from) its params instead of being
+  replicated. ``()`` means scalar/replicated.
 """
 from __future__ import annotations
 
@@ -26,9 +32,20 @@ OptState = Any
 Schedule = Callable[[jax.Array], jax.Array]   # step -> lr
 
 
+def _is_spec_like(x) -> bool:
+    return hasattr(x, "logical") and hasattr(x, "shape")
+
+
+def param_logical_axes(param_specs):
+    """Per-param logical axes, the building block of state_logical_axes."""
+    return jax.tree.map(lambda s: tuple(s.logical), param_specs,
+                        is_leaf=_is_spec_like)
+
+
 class Optimizer(NamedTuple):
     init: Callable[[Params], OptState]
     update: Callable[..., tuple]   # (params, state, grads, skip_mask=None)
+    state_logical_axes: Optional[Callable[[Any], Any]] = None
 
 
 def default_wd_mask(params: Params) -> Params:

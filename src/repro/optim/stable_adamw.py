@@ -31,7 +31,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.optim.base import (Optimizer, Schedule, apply_skip_mask,
-                              constant_schedule, default_wd_mask)
+                              constant_schedule, default_wd_mask,
+                              param_logical_axes)
 
 
 class StableAdamWState(NamedTuple):
@@ -99,7 +100,12 @@ def stable_adamw(learning_rate: float | Schedule = 2e-3,
         aux = {"rms": rms, "lr": lr}
         return new_params, StableAdamWState(t, v, u), aux
 
-    return Optimizer(init, update)
+    def state_logical_axes(param_specs):
+        # moments are elementwise EMAs: they shard exactly like their param
+        axes = param_logical_axes(param_specs)
+        return StableAdamWState(step=(), exp_avg=axes, exp_avg_sq=axes)
+
+    return Optimizer(init, update, state_logical_axes)
 
 
 def adamw(learning_rate=2e-3, beta1=0.9, beta2=0.999, eps=1e-8,

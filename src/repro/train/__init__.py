@@ -1,4 +1,6 @@
 from repro.train.train_step import (  # noqa: F401
     TrainState, init_train_state, make_train_setup, make_train_step,
     make_eval_step)
+from repro.train.engine import (  # noqa: F401
+    TrainEngine, batch_shardings, make_engine, make_shard_ctx, set_mesh)
 from repro.train.trainer import Trainer, TrainerHooks  # noqa: F401

@@ -77,17 +77,22 @@ def make_train_step(bundle, policy: QuantPolicy, parallel: ParallelConfig,
             def acc_body(carry, mb):
                 g_acc, l_acc, rng = carry
                 rng, sub = jax.random.split(rng)
-                g, (l, _) = grad_fn(state.params, mb, sub, state.scaler_state)
+                g, (l, m) = grad_fn(state.params, mb, sub, state.scaler_state)
                 g_acc = jax.tree.map(jnp.add, g_acc, g)
-                return (g_acc, l_acc + l, rng), None
+                return (g_acc, l_acc + l, rng), m
 
             g0 = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
-            (grads, loss, _), _ = jax.lax.scan(
+            (grads, loss, _), mb_metrics = jax.lax.scan(
                 acc_body, (g0, jnp.zeros((), jnp.float32), sub), mbs)
             grads = jax.tree.map(lambda g: g / n_micro, grads)
             loss = loss / n_micro
-            metrics = {}
+            # same keys as n_micro=1: average float metrics over the
+            # microbatches, take the last value for integral ones
+            metrics = jax.tree.map(
+                lambda m: (jnp.mean(m, axis=0)
+                           if jnp.issubdtype(m.dtype, jnp.inexact)
+                           else m[-1]), mb_metrics)
 
         grads, skip_mask, scaler_state, sstats = scaler.unscale(
             grads, state.scaler_state)
@@ -98,6 +103,7 @@ def make_train_step(bundle, policy: QuantPolicy, parallel: ParallelConfig,
         params, opt_state, aux = opt.update(state.params, state.opt_state,
                                             grads, skip_mask=skip_mask)
         out_metrics = {
+            **metrics,
             "loss": loss, "grad_norm": gnorm,
             "lr": aux.get("lr", jnp.zeros(())),
             "n_skipped_tensors": sstats["n_skipped_tensors"],

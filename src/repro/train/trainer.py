@@ -36,9 +36,11 @@ class Trainer:
                  checkpoint_every: int = 0, keep_checkpoints: int = 3,
                  watch_layers=("patch_embed", "embed"),
                  hooks: Optional[TrainerHooks] = None,
-                 log_every: int = 10):
+                 log_every: int = 10,
+                 state_shardings: Optional[TrainState] = None):
         self.step_fn = train_step_fn
         self.state = state
+        self.state_shardings = state_shardings
         self.ckpt = (CheckpointManager(checkpoint_dir, keep_checkpoints)
                      if checkpoint_dir else None)
         self.checkpoint_every = checkpoint_every
@@ -51,9 +53,19 @@ class Trainer:
 
     # ------------------------------------------------------------------
     def maybe_resume(self) -> int:
-        """Restore the latest checkpoint if one exists. Returns start step."""
+        """Restore the latest checkpoint if one exists. Returns start step.
+
+        With ``state_shardings`` (the engine's), each leaf is device_put
+        straight onto its mesh sharding — resumed state lands sharded, no
+        host round-trip through replicated single-device arrays."""
         if self.ckpt is None or self.ckpt.latest_step() is None:
             return int(self.state.step)
+        if self.state_shardings is not None:
+            tree, step, extra = self.ckpt.restore(
+                like=self.state, shardings=self.state_shardings)
+            self.state = (TrainState(*tree)
+                          if isinstance(tree, (list, tuple)) else tree)
+            return step
         tree, step, extra = self.ckpt.restore(like=self.state)
         self.state = jax.tree.map(
             lambda ref, arr: jax.device_put(np.asarray(arr)).astype(ref.dtype)
@@ -62,22 +74,24 @@ class Trainer:
         return step
 
     # ------------------------------------------------------------------
-    def run(self, batch_iter, n_steps: int) -> List[Dict]:
-        start = int(self.state.step)
-        for i in range(start, start + n_steps):
-            self.watchdog.step_start()
-            step_idx, batch = next(batch_iter) if hasattr(
-                batch_iter, "__next__") else (i, batch_iter(i))
-            self.state, metrics = self.step_fn(self.state, batch)
-            loss = float(metrics["loss"])
-            timing = self.watchdog.step_end(i)
+    def _flush(self, pending: List) -> None:
+        """Fetch a block of device metrics in one transfer and run the host
+        bookkeeping (spike detector, RMS monitor, watchdog, history, hooks).
 
-            # stability bookkeeping (host side, cheap)
+        device_get blocks until every step in the window has executed, so
+        (now - window start) / len(window) is the true amortized per-step
+        wall time — the per-step watchdog timing would only see async
+        dispatch overhead."""
+        if not pending:
+            return
+        fetched = jax.device_get([m for _, m in pending])
+        dt = (time.monotonic() - self._window_t0) / len(pending)
+        for (i, _), metrics in zip(pending, fetched):
+            timing = self.watchdog.record(i, dt)
+            loss = float(metrics["loss"])
             self.spike_detector.record(i, loss)
             if "rms" in metrics:
-                self.rms_monitor.record(i, jax.tree.map(
-                    lambda x: np.asarray(x), metrics["rms"]))
-
+                self.rms_monitor.record(i, metrics["rms"])
             rec = {"step": i, "loss": loss,
                    "grad_norm": float(metrics["grad_norm"]),
                    "lr": float(metrics["lr"]),
@@ -90,12 +104,37 @@ class Trainer:
                 print(f"[trainer] step {i} loss {loss:.4f} "
                       f"gnorm {rec['grad_norm']:.3f} dt {timing['dt']*1e3:.0f}ms"
                       + (" SLOW" if timing["slow"] else ""))
+        pending.clear()
+        self._window_t0 = time.monotonic()
 
-            if (self.ckpt is not None and self.checkpoint_every
-                    and (i + 1) % self.checkpoint_every == 0):
+    def run(self, batch_iter, n_steps: int) -> List[Dict]:
+        start = int(self.state.step)
+        # Metrics stay on device between flush boundaries so the step can
+        # dispatch asynchronously — float(loss) every step would block the
+        # host on every device step and serialize the pipeline. The cost:
+        # spike/straggler detection sees per-step values only at flush
+        # granularity (a single slow step is averaged over its window);
+        # log_every=1 restores per-step timing where that matters.
+        pending: List = []
+        self._window_t0 = time.monotonic()
+        for i in range(start, start + n_steps):
+            step_idx, batch = next(batch_iter) if hasattr(
+                batch_iter, "__next__") else (i, batch_iter(i))
+            self.state, metrics = self.step_fn(self.state, batch)
+            pending.append((i, metrics))
+
+            at_ckpt = (self.ckpt is not None and self.checkpoint_every
+                       and (i + 1) % self.checkpoint_every == 0)
+            if at_ckpt or not self.log_every or i % self.log_every == 0:
+                self._flush(pending)
+            if at_ckpt:
                 self.ckpt.save_async(i + 1, self.state)
                 if self.hooks.on_checkpoint:
                     self.hooks.on_checkpoint(i + 1)
+                # the synchronous device->host snapshot above must not be
+                # billed to the next window's step timing
+                self._window_t0 = time.monotonic()
+        self._flush(pending)
         if self.ckpt is not None:
             self.ckpt.wait()
         return self.history

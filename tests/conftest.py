@@ -1,14 +1,24 @@
 import os
 import sys
 
-# Tests see exactly ONE device (the dry-run sets its own 512-device flag in
-# a subprocess). Do not set xla_force_host_platform_device_count here.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Tests see exactly ONE device by default (the dry-run sets its own
+# 512-device flag in a subprocess). The sharded smoke lane opts into fake
+# host devices via REPRO_DRYRUN_DEVICES=N (must happen before the first
+# jax backend init); tests needing multiple devices skip when absent.
+from repro.host_devices import force_host_device_count  # noqa: E402
+
+force_host_device_count(argv=())
 
 import jax  # noqa: E402
 import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+# The engine pins partitionable threefry at make_engine time (sharding-
+# invariant RNG); pin it for the whole test session so RNG draws don't
+# depend on whether an engine test ran earlier in the collection order.
+jax.config.update("jax_threefry_partitionable", True)
 
 
 @pytest.fixture(scope="session")
