@@ -173,6 +173,30 @@ class TrainConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Knobs for the continuously-batched inference engine (repro.serve).
+
+    ``max_batch`` × ``max_len`` fixes the preallocated ring KV cache; the
+    scheduler admits queued requests into free slots and evicts finished
+    ones, so throughput comes from keeping the decode batch full rather
+    than from growing shapes. ``quant_mode``/``kernel_backend`` mirror
+    TrainConfig: int8 modes route every linear through the same
+    kernels/switchback ops inference-side (wgrad-free — only Eq. 3/4
+    forwards run).
+    """
+    max_batch: int = 8               # decode-batch slots (ring cache rows)
+    max_len: int = 256               # cache cells per slot (ring capacity)
+    prefill_bucket: int = 8          # prompts pad to pow2 buckets >= this
+    temperature: float = 0.0         # 0 = greedy argmax
+    cache_dtype: str = "bfloat16"    # KV cache storage dtype
+    rollover: bool = False           # keep decoding past max_len (sliding
+    # window via the ring cache) instead of evicting at the cache edge
+    quant_mode: str = "bf16"         # precision policy for all linears
+    kernel_backend: str = "xla"      # xla|pallas|pallas_interpret
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
 class ShapeConfig:
     """One (input-shape) cell of the assignment."""
     name: str                        # train_4k / prefill_32k / decode_32k / long_500k

@@ -42,3 +42,23 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CI-style sharding tests (8 fake devices)."""
     return _make_mesh(shape, axes)
+
+
+def make_cli_mesh(kind: str):
+    """Shared CLI mesh selection (train + serve launchers). ``auto``
+    data-parallels over whatever devices exist (1 device => a degenerate
+    (1,1) mesh — the sharded step is still the step); ``test`` is the
+    CI-style (2, n/2) mesh; ``single``/``multi`` are the production
+    runbook meshes."""
+    n = jax.device_count()
+    if kind == "auto":
+        return make_test_mesh((n, 1))
+    if kind == "test":
+        assert n >= 2, "--mesh test needs >=2 devices (REPRO_DRYRUN_DEVICES)"
+        return make_test_mesh((2, n // 2))
+    # production meshes shrink to (2, n/2) / (2,2,2) when devices are few —
+    # below that the fallback itself is degenerate
+    need = 8 if kind == "multi" else 2
+    assert n >= need, (f"--mesh {kind} needs >={need} devices "
+                       "(use --devices N or REPRO_DRYRUN_DEVICES)")
+    return make_production_mesh(multi_pod=(kind == "multi"))

@@ -1,59 +1,139 @@
-"""Serving launcher: batched decode with KV caches / recurrent state.
+"""Serving launcher — continuously-batched decode through the ServeEngine.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b \
-        --batch 4 --new-tokens 16
+Every mode runs the same jitted, donated, sharded decode step the tests
+and benchmarks exercise; ``--quant-mode int8_switchback`` +
+``--kernel-backend pallas_interpret`` serves through the SwitchBack int8
+kernels (DESIGN.md §8).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
+        --max-batch 4 --n-requests 8 --new-tokens 16
+
+    # sharded serving on forced host devices:
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
+        --mesh test --devices 8 --n-requests 8
 """
 from __future__ import annotations
 
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
+from repro.host_devices import force_host_device_count
 
-from repro.configs import ALL_ARCHS, get_reduced_config
-from repro.configs.base import ParallelConfig
-from repro.core.precision import QuantPolicy
-from repro.models import build
-from repro.models import transformer as TF
-from repro.models.params import init_params
+# must run before the jax import below: REPRO_DRYRUN_DEVICES / --devices N
+force_host_device_count()
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import ALL_ARCHS, get_reduced_config  # noqa: E402
+from repro.configs.base import ServeConfig  # noqa: E402
+from repro.models import build  # noqa: E402
+from repro.serve import make_serve_engine  # noqa: E402
+
+
+def decode_step_fallback(cfg, args, *, reason: str):
+    """Batched greedy decode via the training-side ``decode_step`` for
+    archs the ServeEngine can't prefill (recurrent state instead of a KV
+    cache). No continuous batching: one fixed batch, token by token."""
+    import time
+
+    import jax.numpy as jnp
+
+    from repro.configs.base import ParallelConfig
+    from repro.core.precision import QuantPolicy
+    from repro.models import transformer as TF
+    from repro.models.params import init_params
+
+    if getattr(cfg, "family", "") in ("clip", "encdec"):
+        raise SystemExit(f"--arch {args.arch}: {reason}")
+    print(f"[serve] {args.arch}: no engine path ({reason}); "
+          "falling back to the decode_step loop")
+    pol = QuantPolicy(args.quant_mode, backend=args.kernel_backend)
+    par = ParallelConfig(remat="none")
+    params = init_params(build(cfg).param_specs,
+                         jax.random.PRNGKey(args.seed))
+    B = args.max_batch
+    state = TF.init_decode_state(cfg, B, args.prompt_len + args.new_tokens)
+    decode = jax.jit(lambda p, s, t: TF.decode_step(p, s, t, cfg, pol, par))
+    prompts = jax.random.randint(jax.random.PRNGKey(args.seed + 1),
+                                 (B, args.prompt_len), 0, cfg.vocab_size)
+    logits = None
+    for t in range(args.prompt_len):                 # stepwise "prefill"
+        logits, state = decode(params, state, prompts[:, t:t + 1])
+    tok = jnp.argmax(logits[:, -1], -1)[:, None]
+    jax.block_until_ready(tok)
+    t0 = time.time()
+    n = 0
+    for _ in range(args.new_tokens - 1):
+        logits, state = decode(params, state, tok)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None]
+        n += B
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    print(f"[serve] {n} new tokens in {dt:.2f}s ({n/max(dt,1e-9):.0f} "
+          f"tok/s, {args.quant_mode}, batch {B}, no continuous batching)")
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="smollm-360m")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--arch", default="smollm-360m", choices=ALL_ARCHS)
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="decode-batch slots (continuous batching width)")
+    ap.add_argument("--max-len", type=int, default=128,
+                    help="ring KV cache cells per slot")
+    ap.add_argument("--n-requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=8,
+                    help="synthetic prompt length (requests vary +/- 50%)")
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--quant-mode", default="bf16")
     ap.add_argument("--kernel-backend", default="xla",
                     choices=("xla", "pallas", "pallas_interpret"))
+    ap.add_argument("--mesh", default="auto",
+                    choices=("auto", "test", "single", "multi"))
+    ap.add_argument("--devices", type=int, default=None,
+                    help="force N host CPU devices (read pre-jax-import)")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    from repro.launch.mesh import make_cli_mesh
     cfg = get_reduced_config(args.arch)
-    if cfg.family == "encdec" or getattr(cfg, "family", "") == "clip":
-        raise SystemExit("use examples/serve_lm.py for decoder-only archs; "
-                         "enc-dec serving lives in repro.models.encdec")
-    par = ParallelConfig(remat="none")
-    pol = QuantPolicy(args.quant_mode, backend=args.kernel_backend)
-    params = init_params(build(cfg).param_specs, jax.random.PRNGKey(0))
-    B = args.batch
-    max_len = args.prompt_len + args.new_tokens
-    state = TF.init_decode_state(cfg, B, max_len)
-    decode = jax.jit(lambda p, s, t: TF.decode_step(p, s, t, cfg, pol, par))
+    mesh = make_cli_mesh(args.mesh)
+    scfg = ServeConfig(max_batch=args.max_batch, max_len=args.max_len,
+                       temperature=args.temperature,
+                       quant_mode=args.quant_mode,
+                       kernel_backend=args.kernel_backend, seed=args.seed)
+    try:
+        engine = make_serve_engine(build(cfg), scfg, mesh)
+    except NotImplementedError as e:
+        # ssm/hybrid archs have no batched-prefill engine path (DESIGN §8);
+        # they still serve through the one-token decode_step loop
+        return decode_step_fallback(cfg, args, reason=str(e))
+    params = engine.init_params(args.seed)
+    print(f"[serve] {args.arch} mesh "
+          f"{dict(zip(mesh.axis_names, mesh.devices.shape))} "
+          f"{args.quant_mode}/{args.kernel_backend} — "
+          f"{scfg.max_batch}x{scfg.max_len} ring cache")
 
-    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, 1), 0,
-                                cfg.vocab_size)
-    t0 = time.time()
-    n = 0
-    for _ in range(args.prompt_len + args.new_tokens):
-        logits, state = decode(params, state, tokens)
-        tokens = jnp.argmax(logits[:, -1], -1)[:, None]
-        n += B
-    jax.block_until_ready(tokens)
-    dt = time.time() - t0
-    print(f"{args.arch}: {n} tokens in {dt:.2f}s "
-          f"({n/dt:.0f} tok/s, CPU, {args.quant_mode})")
+    rng = np.random.default_rng(args.seed)
+    lens = rng.integers(max(args.prompt_len // 2, 1),
+                        args.prompt_len + args.prompt_len // 2 + 1,
+                        size=args.n_requests)
+    lens = np.minimum(lens, args.max_len)    # scheduler rejects > max_len
+    prompts = [rng.integers(0, cfg.vocab_size, size=int(n)).tolist()
+               for n in lens]
+
+    # warmup on the full request list compiles every prefill bucket the
+    # timed run will hit (a single-prompt warmup would leave the other
+    # buckets compiling inside the measured window) + the decode step
+    engine.generate(params, prompts, max_new_tokens=2)
+    gens, stats = engine.generate(params, prompts,
+                                  max_new_tokens=args.new_tokens)
+    print(f"[serve] {stats['new_tokens']} new tokens "
+          f"({stats['prefill_tokens']} prefilled) in "
+          f"{stats['wall_s']:.2f}s — {stats['tokens_per_s']:.0f} tok/s, "
+          f"{stats['decode_steps']} decode steps, "
+          f"{stats['prefill_calls']} prefill calls")
+    print("sample:", gens[0][:12])
 
 
 if __name__ == "__main__":

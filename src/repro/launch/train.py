@@ -28,7 +28,7 @@ from repro.configs import ALL_ARCHS, get_reduced_config
 from repro.configs.base import CLIPConfig, ParallelConfig, TrainConfig
 from repro.core.precision import QuantPolicy
 from repro.data import BigramLM, SyntheticCLIP, SyntheticSeq2Seq
-from repro.launch.mesh import make_production_mesh, make_test_mesh
+from repro.launch.mesh import make_cli_mesh
 from repro.models import build
 from repro.train import Trainer, make_engine
 
@@ -53,25 +53,6 @@ def make_data(cfg, batch: int, seq: int):
                                         cfg.d_model), jnp.bfloat16)
         return b
     return fn
-
-
-def make_mesh(kind: str):
-    """CLI mesh selection. ``auto`` data-parallels over whatever devices
-    exist (1 device => a degenerate (1,1) mesh — the sharded step is still
-    the step); ``test`` is the CI-style (2, n/2) mesh; ``single``/``multi``
-    are the production runbook meshes."""
-    n = jax.device_count()
-    if kind == "auto":
-        return make_test_mesh((n, 1))
-    if kind == "test":
-        assert n >= 2, "--mesh test needs >=2 devices (REPRO_DRYRUN_DEVICES)"
-        return make_test_mesh((2, n // 2))
-    # production meshes shrink to (2, n/2) / (2,2,2) when devices are few —
-    # below that the fallback itself is degenerate
-    need = 8 if kind == "multi" else 2
-    assert n >= need, (f"--mesh {kind} needs >={need} devices "
-                       "(use --devices N or REPRO_DRYRUN_DEVICES)")
-    return make_production_mesh(multi_pod=(kind == "multi"))
 
 
 def main():
@@ -101,7 +82,7 @@ def main():
 
     cfg = get_reduced_config(args.arch)
     bundle = build(cfg)
-    mesh = make_mesh(args.mesh)
+    mesh = make_cli_mesh(args.mesh)
     par = ParallelConfig(mesh_shape=tuple(mesh.devices.shape),
                          mesh_axes=tuple(mesh.axis_names),
                          fsdp=args.fsdp, pure_dp=args.pure_dp,

@@ -30,9 +30,21 @@ NEG_INF = -2.0e38
 
 
 class KVCache(NamedTuple):
+    """Preallocated KV cache for autoregressive decode.
+
+    ``length`` comes in two shapes selecting two write/mask disciplines:
+
+    * scalar int32 — the classic single-sequence cache: every batch row is
+      at the same position (``decode_step`` in models/transformer.py).
+    * ``(B,)`` int32 — the *serve* cache: each batch slot tracks its own
+      absolute token count, writes land at ``length % S_max`` (ring buffer,
+      so sequences longer than the cache keep the last ``S_max`` tokens)
+      and attention masks each slot to its own valid prefix. This is what
+      continuous batching needs: slots admit/evict independently.
+    """
     k: Array          # (B, S_max, n_kv, hd)
     v: Array          # (B, S_max, n_kv, hd)
-    length: Array     # scalar int32 — tokens currently cached
+    length: Array     # int32 — scalar, or (B,) per-slot (see above)
 
 
 def qkv_project(x: Array, p: dict, cfg, policy: QuantPolicy):
@@ -168,23 +180,80 @@ def init_kv_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
 
 def attention_decode_step(x: Array, cache: KVCache, p: dict, cfg,
                           policy: QuantPolicy) -> tuple[Array, KVCache]:
-    """One-token decode: x (B, 1, D); cache holds `length` past tokens."""
+    """One-token decode: x (B, 1, D); cache holds `length` past tokens.
+
+    With a scalar cache length every row writes at the same offset; with a
+    per-slot ``(B,)`` length each slot writes at its own ring position
+    ``length[b] % S_max`` and attends over ``min(length[b]+1, S_max)``
+    valid cells. RoPE is applied at write time with the token's absolute
+    position, so a wrapped (sliding-window) cache needs no per-cell
+    position bookkeeping — the rotation is already baked into stored keys.
+    """
     B = x.shape[0]
-    pos = cache.length[None, None]                       # (1,1) broadcast pos
+    per_slot = cache.length.ndim == 1
+    S_max = cache.k.shape[1]
+    if per_slot:
+        pos = cache.length[:, None]                      # (B, 1) per-slot pos
+    else:
+        pos = jnp.broadcast_to(cache.length[None, None], (B, 1))
     q, k, v = qkv_project(x, p, cfg, policy)
-    q = apply_rope(q, jnp.broadcast_to(pos, (B, 1)), cfg.rope_theta)
-    k = apply_rope(k, jnp.broadcast_to(pos, (B, 1)), cfg.rope_theta)
-    k_cache = jax.lax.dynamic_update_slice_in_dim(
-        cache.k, k.astype(cache.k.dtype), cache.length, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(
-        cache.v, v.astype(cache.v.dtype), cache.length, axis=1)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    if per_slot:
+        write_at = cache.length % S_max                  # ring write position
+        rows = jnp.arange(B)
+        k_cache = cache.k.at[rows, write_at].set(k[:, 0].astype(cache.k.dtype))
+        v_cache = cache.v.at[rows, write_at].set(v[:, 0].astype(cache.v.dtype))
+        kv_len = jnp.minimum(cache.length + 1, S_max)[:, None, None, None]
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k.astype(cache.k.dtype), cache.length, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v.astype(cache.v.dtype), cache.length, axis=1)
+        kv_len = cache.length + 1
     kx = _expand_kv(k_cache, cfg.n_heads)
     vx = _expand_kv(v_cache, cfg.n_heads)
-    o = dense_attention(q, kx, vx, causal=False, kv_len=cache.length + 1)
+    o = dense_attention(q, kx, vx, causal=False, kv_len=kv_len)
     o = o.reshape(B, 1, cfg.n_heads * cfg.hd)
     wo = PRM.use_weight(p["wo"], ("heads", "embed"), policy.compute_dtype)
     out = quant_linear(o, wo, policy=policy)
     return out, KVCache(k_cache, v_cache, cache.length + 1)
+
+
+def attention_prefill(x: Array, cache: KVCache, p: dict, cfg,
+                      policy: QuantPolicy, *, admit: Array
+                      ) -> tuple[Array, KVCache]:
+    """Full-prompt attention that also seeds the serve cache.
+
+    x: (B, S, D) prompts padded to S (S <= S_max); ``admit``: (B,) bool —
+    slots being (re)filled. The attention math is exactly
+    ``attention_block``'s dense path over positions [0, S), so prefill
+    logits match the training/teacher-forcing forward bit-for-bit in f32;
+    pad positions beyond a slot's true prompt length produce garbage that
+    the per-slot length mask (set by the caller) hides from later steps.
+    Non-admitted slots compute the same attention but their cache rows are
+    left untouched — live sequences in other slots are unaffected.
+    """
+    B, S, _ = x.shape
+    assert cache.length.ndim == 1, "prefill needs a per-slot (serve) cache"
+    positions = jnp.arange(S)
+    q, k, v = qkv_project(x, p, cfg, policy)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = PRM.constrain(q, ("batch", None, "heads", None))
+    k = PRM.constrain(k, ("batch", None, "kv_heads", None))
+    kx = _expand_kv(k, cfg.n_heads)
+    vx = _expand_kv(v, cfg.n_heads)
+    o = dense_attention(q, kx, vx, causal=True)
+    o = o.reshape(B, S, cfg.n_heads * cfg.hd)
+    wo = PRM.use_weight(p["wo"], ("heads", "embed"), policy.compute_dtype)
+    out = quant_linear(o, wo, policy=policy)
+    sel = admit[:, None, None, None]
+    k_cache = jnp.where(sel, cache.k.at[:, :S].set(k.astype(cache.k.dtype)),
+                        cache.k)
+    v_cache = jnp.where(sel, cache.v.at[:, :S].set(v.astype(cache.v.dtype)),
+                        cache.v)
+    return out, KVCache(k_cache, v_cache, cache.length)
 
 
 def cross_attention(x: Array, enc_kv: tuple[Array, Array], p: dict, cfg,

@@ -209,8 +209,15 @@ def param_specs(cfg: ModelConfig) -> Dict[str, Any]:
 
 def _layer_apply(x: Array, lp: Dict, cfg: ModelConfig, policy: QuantPolicy,
                  parallel: ParallelConfig, layer_idx: int, *,
-                 positions: Array, state=None):
-    """One transformer layer. Returns (x, new_state, aux_loss)."""
+                 positions: Array, state=None, prefill=None):
+    """One transformer layer. Returns (x, new_state, aux_loss).
+
+    ``prefill=(admit, prompt_lens)`` is the serving admission mode: the
+    attention sub-block runs ``attention_prefill`` (the exact training
+    forward plus an admit-masked cache write into ``state``) and admitted
+    slots' lengths reset to their prompt length; everything after the
+    sequence mixer is the shared layer body, so serve prefill can't drift
+    from the training forward."""
     kind = cfg.layer_kind(layer_idx)
     aux = jnp.zeros((), jnp.float32)
     g1 = lp.get("gamma1")
@@ -219,7 +226,13 @@ def _layer_apply(x: Array, lp: Dict, cfg: ModelConfig, policy: QuantPolicy,
     h = apply_norm(x, lp["norm1"], cfg.norm, cfg.norm_eps)
     new_state = state
     if kind == "attn":
-        if state is None:
+        if prefill is not None:
+            admit, prompt_lens = prefill
+            a, new_state = ATT.attention_prefill(h, state, lp["attn"],
+                                                 cfg, policy, admit=admit)
+            new_state = new_state._replace(
+                length=jnp.where(admit, prompt_lens, new_state.length))
+        elif state is None:
             a = ATT.attention_block(h, lp["attn"], cfg, policy,
                                     positions=positions,
                                     impl=parallel.attn_impl)
@@ -433,5 +446,100 @@ def decode_step(params, states, tokens: Array, cfg: ModelConfig,
             x, ns = scan_body(x, (gp, st))
             outs.append(ns)
         new_states = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    logits = lm_head(params, x, cfg, policy)
+    return logits, new_states
+
+
+# ---------------------------------------------------------------------------
+# serving (continuous batching: per-slot KV caches)
+# ---------------------------------------------------------------------------
+
+def _require_all_attention(cfg: ModelConfig, what: str):
+    P = period(cfg)
+    kinds = {cfg.layer_kind(i) for i in range(P)}
+    if kinds != {"attn"}:
+        raise NotImplementedError(
+            f"{what} supports all-attention stacks only (got layer kinds "
+            f"{sorted(kinds)} for {cfg.name}); ssm/hybrid archs decode "
+            "through decode_step one token at a time")
+    if cfg.frontend is not None:
+        raise NotImplementedError(f"{what}: multimodal frontends are a "
+                                  "training-path feature")
+
+
+def init_serve_state(cfg: ModelConfig, max_batch: int, max_len: int,
+                     dtype=jnp.bfloat16):
+    """Per-slot (continuous-batching) KV caches, stacked over groups.
+
+    Layout per position-in-period: ``KVCache`` with k/v of shape
+    (G, max_batch, max_len, n_kv_heads, hd) and per-slot lengths (G, B).
+    Unlike ``init_decode_state`` every batch slot tracks its own length, so
+    slots can hold sequences at different positions (admit/evict freely).
+    """
+    _require_all_attention(cfg, "init_serve_state")
+    P = period(cfg)
+    G = n_groups(cfg)
+    shape = (G, max_batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return {f"pos{i}": ATT.KVCache(jnp.zeros(shape, dtype),
+                                   jnp.zeros(shape, dtype),
+                                   jnp.zeros((G, max_batch), jnp.int32))
+            for i in range(P)}
+
+
+def serve_state_logical_axes(cfg: ModelConfig):
+    """Logical axes for the serve state — cache leaves shard like the
+    decode state (batch over data, kv_heads over model); lengths shard
+    over batch with the slots they describe."""
+    P = period(cfg)
+    ax = ("layers", "batch", "cache_seq", "kv_heads", None)
+    return {f"pos{i}": ATT.KVCache(ax, ax, ("layers", "batch"))
+            for i in range(P)}
+
+
+def serve_prefill(params, states, tokens: Array, prompt_lens: Array,
+                  admit: Array, cfg: ModelConfig, policy: QuantPolicy,
+                  parallel: ParallelConfig, *, last_only: bool = False):
+    """Seed admitted slots' caches from their (padded) prompts.
+
+    tokens: (B, S) prompts right-padded to a common S <= max_len;
+    prompt_lens: (B,) true lengths; admit: (B,) bool — which slots are
+    being (re)filled. Returns (logits (B, S, V), new states). Logits at
+    positions >= prompt_lens[b] (and for non-admitted slots) are garbage;
+    callers read position ``prompt_lens[b] - 1``. Because the attention is
+    the exact dense training forward, prefill logits match ``forward`` on
+    the same tokens — the parity tests in tests/test_serve.py pin this.
+
+    ``last_only=True`` gathers each slot's last valid hidden state before
+    the lm head and returns logits of shape (B, 1, V) — the serving loop
+    only samples from that row, and the (S, vocab) projection is by far
+    the largest prefill matmul. Norm + head are positionwise, so the
+    gathered row equals ``logits[b, prompt_lens[b]-1]`` of the full call.
+    """
+    _require_all_attention(cfg, "serve_prefill")
+    x = embed_input(params, tokens, cfg, policy)
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(xx, inp):
+        gp, st = inp
+        new_st = {}
+        for i in range(period(cfg)):
+            xx, new_st[f"pos{i}"], _ = _layer_apply(
+                xx, gp[f"pos{i}"], cfg, policy, parallel, i,
+                positions=positions, state=st[f"pos{i}"],
+                prefill=(admit, prompt_lens))
+        return xx, new_st
+
+    if parallel.scan_layers and n_groups(cfg) > 1:
+        x, new_states = jax.lax.scan(body, x, (params["blocks"], states))
+    else:
+        outs = []
+        for g in range(n_groups(cfg)):
+            gp = jax.tree.map(lambda p: p[g], params["blocks"])
+            st = jax.tree.map(lambda s: s[g], states)
+            x, ns = body(x, (gp, st))
+            outs.append(ns)
+        new_states = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    if last_only:
+        x = x[jnp.arange(x.shape[0]), jnp.maximum(prompt_lens - 1, 0)][:, None]
     logits = lm_head(params, x, cfg, policy)
     return logits, new_states

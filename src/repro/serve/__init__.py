@@ -1,0 +1,5 @@
+"""Continuously-batched, sharded inference (the serving twin of
+``repro.train``): ServeEngine + SlotScheduler. See DESIGN.md §8."""
+from repro.serve.engine import (ServeEngine, make_serve_engine,  # noqa: F401
+                                prefill_bucket)
+from repro.serve.scheduler import Request, SlotScheduler  # noqa: F401

@@ -1,0 +1,324 @@
+"""ServeEngine: continuously-batched, sharded int8 inference.
+
+The serving twin of ``repro.train.engine``: given ``(model, ServeConfig,
+mesh)``, ``make_serve_engine`` assembles everything one decode service
+needs —
+
+  * a preallocated **ring KV cache** of shape (max_batch, max_len) per
+    layer with per-slot lengths (``models/transformer.init_serve_state``),
+    born sharded via the same logical-axis rules the trainer uses
+    (batch over ``data``, kv_heads over ``model``),
+  * a jitted, donated **decode step** (one token for every slot, cache
+    buffers reused in place) and a jitted **prefill** that seeds admitted
+    slots' caches from pow2-bucketed prompt batches without touching live
+    neighbours,
+  * the **SlotScheduler** loop (``generate``) that keeps the decode batch
+    full: FIFO admission into free slots, eviction on EOS / token budget /
+    cache edge.
+
+Quantized serving is the point: with ``quant_mode=int8_switchback*`` every
+linear runs the same ``kernels/switchback`` forward ops as training
+(``kernel_backend ∈ {xla, pallas, pallas_interpret}``) — and since
+inference never needs the 16-bit wgrad "switch back", the int8 fast path
+is the *whole* matmul story (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ParallelConfig, ServeConfig
+from repro.core.precision import QuantPolicy
+from repro.models import params as PRM
+from repro.models import transformer as TF
+from repro.models.params import default_rules, init_params, specs_to_shardings
+from repro.serve.scheduler import SlotScheduler
+from repro.train.engine import _axes_to_shardings, make_shard_ctx, set_mesh
+
+
+def prefill_bucket(n: int, lo: int = 8) -> int:
+    """Pad size for a prefill batch: smallest power of two >= max(n, lo).
+
+    Bucketing bounds jit retraces to O(log max_len) prefill shapes instead
+    of one compile per distinct prompt length.
+
+    >>> prefill_bucket(1)
+    8
+    >>> prefill_bucket(9)
+    16
+    >>> prefill_bucket(16)
+    16
+    """
+    b = max(int(lo), 1)
+    while b < n:
+        b *= 2
+    return b
+
+
+def _make_sample_fn(temperature: float):
+    """(B, V) logits -> (B,) int32 tokens. The temperature is fixed per
+    engine, so the greedy/categorical choice is made here at build time —
+    the greedy hot path never pays the full-vocab Gumbel draw."""
+    if temperature > 0:
+        def sample_fn(logits, key):
+            return jax.random.categorical(
+                key, logits.astype(jnp.float32) / temperature,
+                axis=-1).astype(jnp.int32)
+    else:
+        def sample_fn(logits, key):
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return sample_fn
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    """One sharded, donated decode service for a decoder-only LM.
+
+    Build with :func:`make_serve_engine`; the fields are the assembled
+    artifacts (shardings, jitted steps). The high-level entry point is
+    :meth:`generate`; :meth:`prefill` / :meth:`decode` / :meth:`sample`
+    are the raw jitted steps for tests and custom loops.
+    """
+    bundle: Any                      # ModelBundle (cfg + param specs)
+    cfg: Any                         # ModelConfig
+    serve_cfg: ServeConfig
+    parallel: ParallelConfig
+    mesh: Mesh
+    policy: QuantPolicy
+    rules: Dict
+    specs: Dict                      # ParamSpec tree
+    param_shardings: Any             # NamedShardings for params
+    cache_abs: Any                   # ShapeDtypeStructs for the serve state
+    cache_shardings: Any             # NamedShardings for the serve state
+    jit_init_cache: Callable
+    jit_prefill: Callable
+    jit_decode: Callable
+    jit_sample: Callable
+    donate: bool
+
+    # -- assembly helpers ---------------------------------------------------
+    def shard_ctx(self) -> PRM.ShardCtx:
+        """Trace-time sharding context (activation constraints) — the same
+        rule table the TrainEngine traces under."""
+        return make_shard_ctx(self.mesh, self.parallel)
+
+    def init_cache(self):
+        """Fresh all-zero serve state, born on ``cache_shardings`` (no host
+        round-trip). Every slot starts empty (length 0). The jitted init is
+        built once in ``make_serve_engine`` so per-generate() calls hit the
+        compile cache."""
+        with set_mesh(self.mesh), self.shard_ctx():
+            return self.jit_init_cache()
+
+    def init_params(self, seed: int = 0):
+        """Randomly initialized params already placed on the engine's
+        param shardings (for synthetic serving / benchmarks; real
+        deployments restore a checkpoint and ``shard_params`` it)."""
+        with set_mesh(self.mesh), self.shard_ctx():
+            return jax.jit(lambda k: init_params(self.specs, k),
+                           out_shardings=self.param_shardings)(
+                jax.random.PRNGKey(seed))
+
+    def shard_params(self, params):
+        """Place a host/replicated param tree onto the engine's shardings."""
+        return jax.device_put(params, self.param_shardings)
+
+    # -- raw jitted steps ---------------------------------------------------
+    def prefill(self, params, cache, tokens, prompt_lens, admit):
+        """Seed admitted slots from padded prompts.
+
+        tokens: (max_batch, S) int32 right-padded prompts (S a pow2 bucket,
+        S <= max_len); prompt_lens: (max_batch,) true lengths; admit:
+        (max_batch,) bool. Returns ``(logits (B, 1, V), new_cache)`` — the
+        logits row is each slot's last valid prompt position (the only one
+        sampling needs; the lm head skips the other S-1 padded positions).
+        The input cache's buffers are donated. Only admitted slots' cache
+        rows and lengths change — live slots are byte-identical.
+        """
+        with set_mesh(self.mesh), self.shard_ctx():
+            return self.jit_prefill(params, cache,
+                                    jnp.asarray(tokens, jnp.int32),
+                                    jnp.asarray(prompt_lens, jnp.int32),
+                                    jnp.asarray(admit, bool))
+
+    def decode(self, params, cache, tokens):
+        """One decode step for every slot: tokens (max_batch, 1) int32 ->
+        ``(logits (B, 1, V), new_cache)``. Every slot's length advances by
+        one (empty slots decode garbage that admission later overwrites);
+        the input cache is donated so the ring buffer updates in place.
+        """
+        with set_mesh(self.mesh), self.shard_ctx():
+            return self.jit_decode(params, cache,
+                                   jnp.asarray(tokens, jnp.int32))
+
+    def sample(self, logits, key):
+        """Sample next tokens (B,) from last-position logits (B, V) with
+        the engine's configured temperature (0 = greedy argmax)."""
+        return self.jit_sample(logits, key)
+
+    # -- the serving loop ---------------------------------------------------
+    def generate(self, params, prompts: Sequence[Sequence[int]], *,
+                 max_new_tokens: int = 32, eos_id: Optional[int] = None,
+                 seed: Optional[int] = None
+                 ) -> Tuple[List[List[int]], Dict[str, float]]:
+        """Continuously-batched generation for a list of prompts.
+
+        Submits every prompt to a :class:`SlotScheduler`, then loops:
+        admit queued requests into free slots (one bucketed prefill call
+        per admission wave), decode one token for the whole batch, record
+        and evict finished sequences. Returns ``(generations, stats)``
+        where ``generations[i]`` is the token list for ``prompts[i]`` and
+        stats carries tokens/s and step counters (the JSON row source for
+        ``benchmarks/bench_serve.py``).
+        """
+        if max_new_tokens < 1:       # prefill always samples one token
+            return [[] for _ in prompts], {
+                "new_tokens": 0, "prefill_tokens": 0, "decode_steps": 0,
+                "prefill_calls": 0, "wall_s": 0.0, "prefill_s": 0.0,
+                "decode_s": 0.0, "tokens_per_s": 0.0,
+                "decode_tokens_per_s": 0.0}
+        scfg = self.serve_cfg
+        B = scfg.max_batch
+        sched = SlotScheduler(B, scfg.max_len, rollover=scfg.rollover)
+        uids = [sched.submit(p, max_new_tokens=max_new_tokens,
+                             eos_id=eos_id) for p in prompts]
+        cache = self.init_cache()
+        cur = np.zeros((B,), np.int32)        # next input token per slot
+        key = jax.random.PRNGKey(scfg.seed if seed is None else seed)
+        n_new = n_prefill_tok = n_steps = n_prefills = 0
+        n_decoded = 0                         # tokens produced by decode steps
+        prefill_s = decode_s = 0.0
+        t0 = time.perf_counter()
+        while sched.has_work:
+            admits = sched.admit()
+            if admits:
+                t_pf = time.perf_counter()
+                # clamp: the bucket may round past a non-pow2 max_len, but
+                # the scheduler guarantees every prompt fits the cache
+                S = min(prefill_bucket(max(len(r.prompt) for _, r in admits),
+                                       scfg.prefill_bucket), scfg.max_len)
+                toks = np.zeros((B, S), np.int32)
+                lens = np.ones((B,), np.int32)     # dummy 1 for idle slots
+                mask = np.zeros((B,), bool)
+                for slot, r in admits:
+                    toks[slot, :len(r.prompt)] = r.prompt
+                    lens[slot] = len(r.prompt)
+                    mask[slot] = True
+                key, k1 = jax.random.split(key)
+                logits, cache = self.prefill(params, cache, toks, lens, mask)
+                tok = np.asarray(self.sample(logits[:, 0], k1))
+                for slot, _ in admits:
+                    sched.record(slot, tok[slot])
+                    cur[slot] = tok[slot]
+                n_prefill_tok += int(sum(len(r.prompt) for _, r in admits))
+                n_new += len(admits)
+                n_prefills += 1
+                prefill_s += time.perf_counter() - t_pf
+            running = sched.running
+            if not running:
+                continue
+            t_dec = time.perf_counter()
+            key, k1 = jax.random.split(key)
+            logits, cache = self.decode(params, cache, cur[:, None])
+            tok = np.asarray(self.sample(logits[:, 0], k1))
+            for slot, _ in running:
+                sched.record(slot, tok[slot])
+                cur[slot] = tok[slot]
+            n_new += len(running)
+            n_decoded += len(running)
+            n_steps += 1
+            decode_s += time.perf_counter() - t_dec
+        dt = time.perf_counter() - t0
+        stats = {"new_tokens": n_new, "prefill_tokens": n_prefill_tok,
+                 "decode_steps": n_steps, "prefill_calls": n_prefills,
+                 "wall_s": dt, "prefill_s": prefill_s, "decode_s": decode_s,
+                 "tokens_per_s": n_new / max(dt, 1e-9),
+                 "decode_tokens_per_s": n_decoded / max(decode_s, 1e-9)}
+        return [sched.results[u] for u in uids], stats
+
+
+def make_serve_engine(model, serve_cfg: ServeConfig, mesh: Mesh, *,
+                      parallel: Optional[ParallelConfig] = None,
+                      policy: Optional[QuantPolicy] = None,
+                      donate: bool = True) -> ServeEngine:
+    """Assemble the sharded serving stack for ``model`` on ``mesh``.
+
+    ``model`` is an arch name, a ModelConfig, or a prebuilt ModelBundle
+    (decoder-only all-attention LMs; CLIP / enc-dec / ssm raise).
+    ``parallel`` defaults to a no-remat ParallelConfig matching the mesh;
+    ``policy`` defaults to ``serve_cfg.quant_mode``/``kernel_backend`` —
+    the one knob that flips every linear between XLA and the Pallas
+    SwitchBack kernels. ``donate=False`` exists for benchmarks that reuse
+    a cache across timed calls.
+    """
+    from repro.models import build
+    if isinstance(model, str):
+        from repro.configs import get_config
+        model = get_config(model)
+    bundle = model if hasattr(model, "param_specs") else build(model)
+    cfg = bundle.cfg
+    if getattr(cfg, "family", "") in ("clip", "encdec"):
+        raise NotImplementedError(
+            "ServeEngine serves decoder-only LMs; CLIP scores pairs via "
+            "models/clip.py and enc-dec decodes via models/encdec.py")
+
+    parallel = parallel or ParallelConfig(
+        mesh_shape=tuple(mesh.devices.shape),
+        mesh_axes=tuple(mesh.axis_names), remat="none")
+    assert tuple(mesh.axis_names) == tuple(parallel.mesh_axes), (
+        f"mesh axes {mesh.axis_names} != ParallelConfig.mesh_axes "
+        f"{parallel.mesh_axes}")
+    policy = policy or QuantPolicy(serve_cfg.quant_mode,
+                                   backend=serve_cfg.kernel_backend)
+    rules = default_rules(parallel)
+    specs = bundle.param_specs
+    param_shard = specs_to_shardings(specs, mesh, rules)
+
+    dtype = jnp.dtype(serve_cfg.cache_dtype)
+    cache_abs = jax.eval_shape(
+        lambda: TF.init_serve_state(cfg, serve_cfg.max_batch,
+                                    serve_cfg.max_len, dtype))
+    cache_shard = _axes_to_shardings(
+        cache_abs, TF.serve_state_logical_axes(cfg), mesh, rules)
+    repl = NamedSharding(mesh, P())
+
+    def prefill_fn(p, st, toks, lens, admit):
+        return TF.serve_prefill(p, st, toks, lens, admit, cfg, policy,
+                                parallel, last_only=True)
+
+    def decode_fn(p, st, toks):
+        return TF.decode_step(p, st, toks, cfg, policy, parallel)
+
+    # out_shardings pin the returned cache to the canonical layout — without
+    # this GSPMD may pick a different (e.g. hd-over-model) layout for the
+    # prefill output and the decode step's in_shardings would reject it.
+    dn = (1,) if donate else ()
+    jit_prefill = jax.jit(prefill_fn,
+                          in_shardings=(param_shard, cache_shard, repl,
+                                        repl, repl),
+                          out_shardings=(None, cache_shard),
+                          donate_argnums=dn)
+    jit_decode = jax.jit(decode_fn,
+                         in_shardings=(param_shard, cache_shard, repl),
+                         out_shardings=(None, cache_shard),
+                         donate_argnums=dn)
+    jit_init_cache = jax.jit(
+        lambda: TF.init_serve_state(cfg, serve_cfg.max_batch,
+                                    serve_cfg.max_len, dtype),
+        out_shardings=cache_shard)
+    jit_sample = jax.jit(_make_sample_fn(serve_cfg.temperature))
+
+    return ServeEngine(bundle=bundle, cfg=cfg, serve_cfg=serve_cfg,
+                       parallel=parallel, mesh=mesh, policy=policy,
+                       rules=rules, specs=specs,
+                       param_shardings=param_shard, cache_abs=cache_abs,
+                       cache_shardings=cache_shard,
+                       jit_init_cache=jit_init_cache,
+                       jit_prefill=jit_prefill, jit_decode=jit_decode,
+                       jit_sample=jit_sample, donate=donate)

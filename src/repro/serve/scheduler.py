@@ -1,0 +1,144 @@
+"""Slot scheduler for continuous batching: FIFO admission, per-slot
+eviction, bounded by a fixed (max_batch, max_len) decode batch.
+
+The scheduler is deliberately pure Python with no jax dependency — it
+owns *which request lives in which batch slot*; all tensor work (cache
+writes, masking) keys off the per-slot lengths the engine derives from
+it. Requests are admitted in arrival order into the lowest free slot and
+evicted the moment they finish (max_new_tokens reached, EOS sampled, or
+the ring cache full when ``rollover`` is off), so a freed slot is
+reusable on the very next engine iteration.
+
+>>> s = SlotScheduler(max_batch=2, max_len=16)
+>>> s.submit([1, 2, 3], max_new_tokens=2)
+0
+>>> s.submit([4, 5], max_new_tokens=2)
+1
+>>> s.submit([6], max_new_tokens=1)
+2
+>>> [(slot, r.uid) for slot, r in s.admit()]   # FIFO into free slots
+[(0, 0), (1, 1)]
+>>> s.admit()                                  # batch full: uid 2 waits
+[]
+>>> s.pending
+1
+>>> s.record(0, 7)                             # first sampled token
+False
+>>> s.record(0, 8)                             # hits max_new_tokens=2
+True
+>>> [(slot, r.uid) for slot, r in s.admit()]   # freed slot 0 reused
+[(0, 2)]
+>>> s.results[0]
+[7, 8]
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request tracked by the scheduler.
+
+    ``prompt`` is the token ids to prefill; ``generated`` accumulates the
+    sampled continuation. A request is finished when ``generated`` reaches
+    ``max_new_tokens``, when ``eos_id`` is sampled, or when prompt +
+    generated hits the cache capacity (unless the scheduler rolls over).
+    """
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    generated: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def total_len(self) -> int:
+        return len(self.prompt) + len(self.generated)
+
+
+class SlotScheduler:
+    """Admit/evict requests into a fixed pool of decode-batch slots.
+
+    >>> s = SlotScheduler(max_batch=1, max_len=4)
+    >>> _ = s.submit([1, 2, 3], max_new_tokens=99)
+    >>> [(slot, r.uid) for slot, r in s.admit()]
+    [(0, 0)]
+    >>> s.record(0, 9)      # cells used: prompt(3) + 0 — one more fits
+    False
+    >>> s.record(0, 9)      # prompt(3) + generated(2) > max_len: evicted
+    True
+    >>> s.has_work
+    False
+    """
+
+    def __init__(self, max_batch: int, max_len: int, *,
+                 rollover: bool = False):
+        assert max_batch >= 1 and max_len >= 2
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.rollover = rollover
+        self._queue: deque[Request] = deque()
+        self._slots: List[Optional[Request]] = [None] * max_batch
+        self._next_uid = 0
+        self.results: Dict[int, List[int]] = {}
+
+    # -- submission / admission --------------------------------------------
+    def submit(self, prompt: Sequence[int], *, max_new_tokens: int = 32,
+               eos_id: Optional[int] = None) -> int:
+        """Queue a request; returns its uid. Prompts must fit the cache."""
+        prompt = list(prompt)
+        if not prompt:
+            raise ValueError("empty prompt")
+        if len(prompt) > self.max_len:
+            raise ValueError(f"prompt len {len(prompt)} > max_len "
+                             f"{self.max_len}; truncate client-side")
+        req = Request(self._next_uid, prompt, max_new_tokens, eos_id)
+        self._next_uid += 1
+        self._queue.append(req)
+        return req.uid
+
+    def admit(self) -> List[Tuple[int, Request]]:
+        """Move queued requests into free slots, FIFO, lowest slot first.
+        Returns the (slot, request) pairs admitted this call — the engine
+        prefills exactly these."""
+        out = []
+        for slot in range(self.max_batch):
+            if self._slots[slot] is None and self._queue:
+                req = self._queue.popleft()
+                self._slots[slot] = req
+                out.append((slot, req))
+        return out
+
+    # -- decode-step bookkeeping -------------------------------------------
+    def record(self, slot: int, token: int) -> bool:
+        """Record one sampled token for ``slot``; evicts and returns True
+        when the request finished with it."""
+        req = self._slots[slot]
+        assert req is not None, f"slot {slot} is empty"
+        req.generated.append(int(token))
+        # cache edge: after k generated tokens the ring holds prompt+k-1
+        # KVs (the newest token's KV is only written when the next decode
+        # consumes it), so another token fits until total_len exceeds
+        # max_len — evicting at >= would short every near-full request.
+        done = (len(req.generated) >= req.max_new_tokens
+                or (req.eos_id is not None and int(token) == req.eos_id)
+                or (not self.rollover and req.total_len > self.max_len))
+        if done:
+            self.results[req.uid] = req.generated
+            self._slots[slot] = None
+        return done
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def running(self) -> List[Tuple[int, Request]]:
+        return [(i, r) for i, r in enumerate(self._slots) if r is not None]
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._queue) or any(r is not None for r in self._slots)

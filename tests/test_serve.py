@@ -1,0 +1,336 @@
+"""ServeEngine suite: decode correctness + scheduler behaviour.
+
+* prefill-vs-forward logit parity (bit-match in f32 compute) across
+  padded prompt lengths,
+* incremental decode parity against the teacher-forced forward,
+* batch-slot reuse: admitting a new request into an evicted slot must
+  reproduce a fresh run and leave live neighbours untouched,
+* int8 parity: xla vs pallas_interpret backends, and prefill-vs-decode
+  within kernel-parity tolerances,
+* SlotScheduler admission/eviction/ordering under a full batch.
+
+The sharded test needs REPRO_DRYRUN_DEVICES=8 (same lane as
+tests/test_engine.py); it skips on the default 1-device run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.configs.base import ParallelConfig, ServeConfig
+from repro.core.precision import QuantPolicy
+from repro.launch.mesh import make_test_mesh
+from repro.models import build
+from repro.models import transformer as TF
+from repro.serve import SlotScheduler, make_serve_engine, prefill_bucket
+
+needs8 = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="sharded lane only (REPRO_DRYRUN_DEVICES=8)")
+
+ARCH = "smollm-360m"
+PAR = ParallelConfig(remat="none")
+F32 = QuantPolicy("bf16", compute_dtype=jnp.float32)
+
+
+def _tokens(key, batch, seq, vocab):
+    return jax.random.randint(jax.random.PRNGKey(key), (batch, seq),
+                              0, vocab)
+
+
+def _max_rel(a, b):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    return np.abs(a - b).max() / (np.abs(a).max() + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+def test_scheduler_fifo_admission_under_full_batch():
+    s = SlotScheduler(max_batch=2, max_len=16)
+    for _ in range(4):
+        s.submit([1, 2], max_new_tokens=3)
+    assert [(sl, r.uid) for sl, r in s.admit()] == [(0, 0), (1, 1)]
+    assert s.admit() == [] and s.pending == 2        # batch full: FIFO waits
+    for t in range(3):
+        done = s.record(1, t)
+    assert done                                      # uid 1 hit its budget
+    assert [(sl, r.uid) for sl, r in s.admit()] == [(1, 2)]   # freed slot,
+    assert s.pending == 1                            # next uid in order
+    assert s.results[1] == [0, 1, 2]
+
+
+def test_scheduler_eos_and_cache_cap_eviction():
+    s = SlotScheduler(max_batch=1, max_len=32)
+    s.submit([1], max_new_tokens=99, eos_id=7)
+    s.admit()
+    assert not s.record(0, 5)
+    assert s.record(0, 7)                            # EOS evicts
+    assert s.results[0] == [5, 7]
+
+    s = SlotScheduler(max_batch=1, max_len=4)
+    s.submit([1, 2, 3], max_new_tokens=99)
+    s.admit()
+    assert not s.record(0, 9)                        # cell 3 still free
+    assert s.record(0, 9)                            # cache exhausted
+    rolls = SlotScheduler(max_batch=1, max_len=4, rollover=True)
+    rolls.submit([1, 2, 3], max_new_tokens=99)
+    rolls.admit()
+    assert not rolls.record(0, 9)
+    assert not rolls.record(0, 9)                    # ring keeps decoding
+
+
+def test_scheduler_rejects_bad_prompts():
+    s = SlotScheduler(max_batch=1, max_len=4)
+    with pytest.raises(ValueError):
+        s.submit([])
+    with pytest.raises(ValueError):
+        s.submit([1, 2, 3, 4, 5])
+
+
+def test_prefill_bucket_pow2():
+    assert [prefill_bucket(n) for n in (1, 8, 9, 16, 33)] == \
+        [8, 8, 16, 16, 64]
+
+
+# ---------------------------------------------------------------------------
+# decode correctness (transformer level)
+# ---------------------------------------------------------------------------
+
+def test_prefill_matches_forward_bitwise_padded_lengths(reduced):
+    """Prefill logits == training forward, bit-for-bit in f32 compute,
+    for every slot's valid prefix under right-padding."""
+    cfg, _, params = reduced(ARCH)
+    B, S = 3, 8
+    lens = jnp.array([8, 5, 3], jnp.int32)
+    tokens = _tokens(1, B, S, cfg.vocab_size)
+    full, _ = TF.forward(params, tokens, cfg, F32, PAR)
+    st = TF.init_serve_state(cfg, B, 16, dtype=jnp.float32)
+    pf, st = TF.serve_prefill(params, st, tokens, lens,
+                              jnp.ones((B,), bool), cfg, F32, PAR)
+    for b in range(B):
+        L = int(lens[b])
+        np.testing.assert_array_equal(np.asarray(pf[b, :L]),
+                                      np.asarray(full[b, :L]))
+    np.testing.assert_array_equal(
+        np.asarray(st["pos0"].length),
+        np.tile(np.asarray(lens), (TF.n_groups(cfg), 1)))
+    # last_only (the engine's hot path) == the full call's per-slot row
+    lo, _ = TF.serve_prefill(
+        params, TF.init_serve_state(cfg, B, 16, dtype=jnp.float32),
+        tokens, lens, jnp.ones((B,), bool), cfg, F32, PAR, last_only=True)
+    assert lo.shape[1] == 1
+    for b in range(B):
+        np.testing.assert_array_equal(
+            np.asarray(lo[b, 0]), np.asarray(pf[b, int(lens[b]) - 1]))
+
+
+def test_incremental_decode_matches_forward(reduced):
+    """Prefill then one-token decode steps reproduce the teacher-forced
+    forward at every continued position, per slot, under padding."""
+    cfg, _, params = reduced(ARCH)
+    B, S = 3, 8
+    lens = np.array([8, 5, 3])
+    tokens = _tokens(1, B, S, cfg.vocab_size)
+    full, _ = TF.forward(params, tokens, cfg, F32, PAR)
+    st = TF.init_serve_state(cfg, B, 16, dtype=jnp.float32)
+    _, st = TF.serve_prefill(params, st, tokens, jnp.asarray(lens),
+                             jnp.ones((B,), bool), cfg, F32, PAR)
+    for t in range(3):
+        cur = jnp.stack([tokens[b, min(int(lens[b]) + t, S - 1)]
+                         for b in range(B)])[:, None]
+        lg, st = TF.decode_step(params, st, cur, cfg, F32, PAR)
+        for b in range(B):
+            pos = int(lens[b]) + t
+            if pos < S:        # slots whose teacher sequence continues
+                np.testing.assert_allclose(
+                    np.asarray(lg[b, 0]), np.asarray(full[b, pos]),
+                    rtol=0, atol=1e-5)
+
+
+def test_slot_reuse_and_neighbour_isolation(reduced):
+    """Re-prefilling one slot (admit mask) must reproduce a fresh run in
+    that slot and leave the live neighbour's decode trajectory
+    byte-identical."""
+    cfg, _, params = reduced(ARCH)
+    B, S = 2, 6
+    toks_a = _tokens(2, B, S, cfg.vocab_size)
+    st = TF.init_serve_state(cfg, B, 16, dtype=jnp.float32)
+    lens = jnp.array([S, 4], jnp.int32)
+    _, st = TF.serve_prefill(params, st, toks_a, lens,
+                             jnp.ones((B,), bool), cfg, F32, PAR)
+    # advance both slots two steps
+    cont = _tokens(3, B, 4, cfg.vocab_size)
+    for t in range(2):
+        _, st = TF.decode_step(params, st, cont[:, t:t + 1], cfg, F32, PAR)
+
+    # admit a NEW prompt into slot 0 only; slot 1 keeps decoding
+    toks_c = _tokens(4, B, S, cfg.vocab_size)
+    _, st = TF.serve_prefill(params, st, toks_c, jnp.array([5, 1]),
+                             jnp.array([True, False]), cfg, F32, PAR)
+    lg, st = TF.decode_step(params, st, cont[:, 2:3], cfg, F32, PAR)
+
+    # slot 0 must equal a fresh single-sequence run of the new prompt
+    full_c, _ = TF.forward(params, toks_c[:1, :5], cfg, F32, PAR)
+    st_c = TF.init_serve_state(cfg, 1, 16, dtype=jnp.float32)
+    _, st_c = TF.serve_prefill(params, st_c, toks_c[:1, :5],
+                               jnp.array([5]), jnp.ones((1,), bool),
+                               cfg, F32, PAR)
+    lg_c, _ = TF.decode_step(params, st_c, cont[:1, 2:3], cfg, F32, PAR)
+    np.testing.assert_allclose(np.asarray(lg[0]), np.asarray(lg_c[0]),
+                               rtol=0, atol=1e-5)
+
+    # slot 1 must match the trajectory of an undisturbed run
+    st_b = TF.init_serve_state(cfg, B, 16, dtype=jnp.float32)
+    _, st_b = TF.serve_prefill(params, st_b, toks_a, lens,
+                               jnp.ones((B,), bool), cfg, F32, PAR)
+    for t in range(3):
+        lg_b, st_b = TF.decode_step(params, st_b, cont[:, t:t + 1],
+                                    cfg, F32, PAR)
+    np.testing.assert_array_equal(np.asarray(lg[1]), np.asarray(lg_b[1]))
+
+
+def test_ring_cache_wraparound_stays_finite(reduced):
+    """Decoding past max_len wraps the ring (sliding window): lengths keep
+    counting, writes land mod max_len, logits stay finite."""
+    cfg, _, params = reduced(ARCH)
+    B, MAXLEN = 2, 8
+    st = TF.init_serve_state(cfg, B, MAXLEN, dtype=jnp.float32)
+    toks = _tokens(5, B, 4, cfg.vocab_size)
+    _, st = TF.serve_prefill(params, st, toks, jnp.array([4, 4]),
+                             jnp.ones((B,), bool), cfg, F32, PAR)
+    for t in range(10):                     # 4 + 10 > max_len: wraps
+        lg, st = TF.decode_step(
+            params, st, _tokens(6 + t, B, 1, cfg.vocab_size), cfg, F32, PAR)
+        assert np.isfinite(np.asarray(lg)).all()
+    assert int(st["pos0"].length[0, 0]) == 14
+
+
+# ---------------------------------------------------------------------------
+# int8: kernel backends + prefill/decode parity
+# ---------------------------------------------------------------------------
+
+def _int8_run(params, cfg, backend, tokens, lens, n_steps=2):
+    pol = QuantPolicy("int8_switchback", backend=backend)
+    st = TF.init_serve_state(cfg, tokens.shape[0], 16)
+    pf, st = TF.serve_prefill(params, st, tokens, lens,
+                              jnp.ones(tokens.shape[:1], bool),
+                              cfg, pol, PAR)
+    outs = [pf]
+    for t in range(n_steps):
+        lg, st = TF.decode_step(params, st,
+                                _tokens(9 + t, tokens.shape[0], 1,
+                                        cfg.vocab_size), cfg, pol, PAR)
+        outs.append(lg)
+    return outs
+
+
+def test_int8_serve_xla_vs_pallas_interpret(reduced):
+    """The serving forward must agree between the XLA reference and the
+    real Pallas kernel grid (interpret mode) — same bound the training
+    backend-parity suite uses for bf16 outputs."""
+    cfg, _, params = reduced(ARCH)
+    tokens = _tokens(7, 2, 8, cfg.vocab_size)
+    lens = jnp.array([8, 6], jnp.int32)
+    a = _int8_run(params, cfg, "xla", tokens, lens)
+    b = _int8_run(params, cfg, "pallas_interpret", tokens, lens)
+    for x, y in zip(a, b):
+        assert _max_rel(x, y) <= 1.6e-2
+
+
+def test_int8_prefill_vs_decode_parity(reduced):
+    """Row-wise activation quantization is per token, so prefilling S
+    tokens and decoding the S-th incrementally see identical quantized
+    operands — logits agree within kernel tolerance."""
+    cfg, _, params = reduced(ARCH)
+    pol = QuantPolicy("int8_switchback")
+    B, S = 2, 8
+    tokens = _tokens(8, B, S, cfg.vocab_size)
+    lens_full = jnp.full((B,), S, jnp.int32)
+    st = TF.init_serve_state(cfg, B, 16)
+    pf, _ = TF.serve_prefill(params, st, tokens, lens_full,
+                             jnp.ones((B,), bool), cfg, pol, PAR)
+    st2 = TF.init_serve_state(cfg, B, 16)
+    _, st2 = TF.serve_prefill(params, st2, tokens[:, :S - 1],
+                              jnp.full((B,), S - 1, jnp.int32),
+                              jnp.ones((B,), bool), cfg, pol, PAR)
+    lg, _ = TF.decode_step(params, st2, tokens[:, S - 1:], cfg, pol, PAR)
+    assert _max_rel(pf[:, -1], lg[:, 0]) <= 1.6e-2
+
+
+# ---------------------------------------------------------------------------
+# engine level
+# ---------------------------------------------------------------------------
+
+def _engine(max_batch, max_len=32, mesh=None, **cfg_kw):
+    cfg = get_reduced_config(ARCH)
+    scfg = ServeConfig(max_batch=max_batch, max_len=max_len, **cfg_kw)
+    return make_serve_engine(build(cfg), scfg, mesh or make_test_mesh((1, 1)),
+                             policy=F32), cfg
+
+
+def test_generate_slot_reuse_matches_lone_runs(reduced):
+    """3 requests through a 2-slot engine (forces eviction + slot reuse)
+    must generate exactly what each request gets in a batch-1 engine."""
+    eng2, cfg = _engine(2)
+    params = eng2.init_params(0)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=6).tolist()
+               for _ in range(3)]
+    gens, stats = eng2.generate(params, prompts, max_new_tokens=5)
+    assert all(len(g) == 5 for g in gens)
+    assert stats["prefill_calls"] >= 2            # reuse actually happened
+    eng1, _ = _engine(1)
+    for p, g in zip(prompts, gens):
+        lone, _ = eng1.generate(params, [p], max_new_tokens=5)
+        assert lone[0] == g
+
+
+def test_generate_clamps_bucket_to_non_pow2_max_len(reduced):
+    """A prompt whose pow2 bucket rounds past a non-pow2 max_len must
+    still prefill (bucket clamps to max_len; the scheduler guarantees
+    the prompt itself fits)."""
+    eng, cfg = _engine(2, max_len=12)
+    params = eng.init_params(0)
+    prompt = list(np.random.default_rng(1).integers(0, cfg.vocab_size, 9))
+    gens, _ = eng.generate(params, [prompt], max_new_tokens=3)
+    assert len(gens[0]) == 3
+
+
+def test_generate_eos_stops_early(reduced):
+    eng, cfg = _engine(1)
+    params = eng.init_params(0)
+    prompt = list(range(1, 7))
+    ref, _ = eng.generate(params, [prompt], max_new_tokens=6)
+    eos = ref[0][2]
+    out, _ = eng.generate(params, [prompt], max_new_tokens=6, eos_id=eos)
+    assert out[0] == ref[0][:3]                   # stopped at the EOS draw
+
+
+def test_decode_donates_cache(reduced):
+    eng, cfg = _engine(2)
+    params = eng.init_params(0)
+    cache = eng.init_cache()
+    _, new_cache = eng.decode(params, cache, np.zeros((2, 1), np.int32))
+    assert all(l.is_deleted() for l in jax.tree.leaves(cache))
+    assert not any(l.is_deleted() for l in jax.tree.leaves(new_cache))
+
+
+@needs8
+def test_sharded_serve_matches_single_device():
+    """Greedy generations on a (2, 4) mesh must equal the 1-device run —
+    the serving analogue of the TrainEngine parity suite."""
+    eng1, cfg = _engine(4)
+    engN, _ = _engine(4, mesh=make_test_mesh((2, 4)))
+    params_host = jax.device_get(eng1.init_params(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).tolist()
+               for n in (5, 7, 3, 6)]
+    g1, _ = eng1.generate(eng1.shard_params(params_host), prompts,
+                          max_new_tokens=6)
+    gN, _ = engN.generate(engN.shard_params(params_host), prompts,
+                          max_new_tokens=6)
+    assert g1 == gN
