@@ -142,7 +142,12 @@ class ParallelConfig:
     remat: str = "block"             # none|block|full
     sequence_parallel: bool = False  # shard seq over data when batch too small
     grad_compression: str = "none"   # none|int8_rowwise
-    attn_impl: str = "flash_scan"    # flash_scan | dense
+    attn_impl: str = "flash_scan"    # flash_scan | dense — "dense" forces
+    # the materialized-scores oracle on EVERY backend (kernels included)
+    attn_block_q: int = 0            # flash-attention kernel Q-tile rows;
+    # 0 = auto (min(128, pow2ceil(Sq)) — kernels/flash_attention/ops.py)
+    attn_block_k: int = 0            # KV-tile rows (fwd/bwd and the serve
+    # decode ring-cache kernel); 0 = auto
 
     @property
     def data_axes(self) -> Tuple[str, ...]:
@@ -193,6 +198,8 @@ class ServeConfig:
     # window via the ring cache) instead of evicting at the cache edge
     quant_mode: str = "bf16"         # precision policy for all linears
     kernel_backend: str = "xla"      # xla|pallas|pallas_interpret
+    attn_block_q: int = 0            # flash-attention tile sizes for the
+    attn_block_k: int = 0            # engine's ParallelConfig; 0 = auto
     seed: int = 0
 
 

@@ -1,0 +1,8 @@
+"""Fused flash-attention kernels (train fwd/bwd + serve decode).
+
+Public entry points live in :mod:`repro.kernels.flash_attention.ops`;
+kernel bodies in ``flash_attention.py``; pure-jnp oracles in ``ref.py``.
+"""
+from repro.kernels.flash_attention.ops import (  # noqa: F401
+    BACKENDS, choose_attn_blocks, decode_attention, flash_attention,
+    flash_fwd_lse, make_flash_attention)

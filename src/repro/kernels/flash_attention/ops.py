@@ -1,0 +1,191 @@
+"""Jit'd public wrappers for the flash-attention kernels.
+
+Handles: backend dispatch (pallas TPU / pallas interpret / pure-XLA ref),
+model→kernel layout moves, shape padding to block multiples (pad keys are
+masked in-kernel via the static ``kv_valid``; pad queries are sliced off),
+the static block-size heuristic, and the ``custom_vjp`` that wires the
+recompute-style backward kernels in (DESIGN.md §9).
+
+Model-layout contract (what models/attention.py speaks): q (B, Sq, H, hd),
+k/v (B, Sk, KV, hd) with H a multiple of KV (GQA); outputs match q.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as _k
+from repro.kernels.flash_attention import ref as _ref
+
+Backend = Literal["xla", "pallas", "pallas_interpret"]
+BACKENDS: tuple[str, ...] = ("xla", "pallas", "pallas_interpret")
+
+# (block_q, block_k) = 128 matches the TPU T(8, 128) lane tiling and keeps
+# the per-grid-cell working set (q/k/v tiles + f32 scores + stats) well
+# under VMEM; shrink to the padded pow2 when the sequence is shorter.
+DEFAULT_BLOCK = 128
+
+
+def _pow2_ceil(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
+def choose_attn_blocks(Sq: int, Sk: int, block_q: int = 0,
+                       block_k: int = 0) -> tuple[int, int]:
+    """Static block-size choice: the configured size when given (>0), else
+    min(128, pow2ceil(S)) per axis — tiny test shapes pad to one block."""
+    bq = block_q or min(DEFAULT_BLOCK, _pow2_ceil(Sq))
+    bk = block_k or min(DEFAULT_BLOCK, _pow2_ceil(Sk))
+    return max(bq, 1), max(bk, 1)
+
+
+def _pad_seq(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _to_kernel(x: jax.Array) -> jax.Array:
+    """(B, S, H, hd) -> (B, H, S, hd)."""
+    return jnp.transpose(x, (0, 2, 1, 3))
+
+
+def _check(q, k, v):
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    assert k.shape == v.shape and k.shape[0] == B and k.shape[3] == hd, \
+        (q.shape, k.shape, v.shape)
+    assert H % KV == 0, f"GQA needs H % KV == 0, got {H} % {KV}"
+    return 1.0 / math.sqrt(hd)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "backend", "block_q", "block_k"))
+def flash_fwd_lse(q, k, v, *, causal: bool, backend: Backend = "xla",
+                  block_q: int = 0, block_k: int = 0):
+    """Raw forward: (o (B, Sq, H, hd) in q.dtype, lse (B, H, Sq) f32).
+
+    The non-differentiable entry point (tests, benchmarks, inference
+    paths); training goes through :func:`flash_attention`.
+    """
+    scale = _check(q, k, v)
+    Sq, Sk = q.shape[1], k.shape[1]
+    if backend == "xla":
+        o, lse = _ref.mha_fwd(_to_kernel(q), _to_kernel(k), _to_kernel(v),
+                              causal=causal, kv_valid=Sk, scale=scale)
+        return _to_kernel(o), lse
+    bq, bk = choose_attn_blocks(Sq, Sk, block_q, block_k)
+    qk = _pad_seq(_to_kernel(q), 2, bq)
+    kk = _pad_seq(_to_kernel(k), 2, bk)
+    vk = _pad_seq(_to_kernel(v), 2, bk)
+    o, lse = _k.flash_fwd(qk, kk, vk, causal=causal, kv_valid=Sk,
+                          scale=scale, block_q=bq, block_k=bk,
+                          interpret=(backend == "pallas_interpret"))
+    return _to_kernel(o[:, :, :Sq]), lse[:, :, :Sq]
+
+
+def _bwd_impl(causal, backend, block_q, block_k, res, do):
+    q, k, v, o, lse = res
+    scale = _check(q, k, v)
+    Sq, Sk = q.shape[1], k.shape[1]
+    di = jnp.sum(o.astype(jnp.float32) * do.astype(jnp.float32),
+                 axis=-1)                                    # (B, Sq, H)
+    di = jnp.transpose(di, (0, 2, 1))                        # (B, H, Sq)
+    if backend == "xla":
+        dq, dk, dv = _ref.mha_bwd(
+            _to_kernel(q), _to_kernel(k), _to_kernel(v), _to_kernel(o),
+            lse, _to_kernel(do), causal=causal, kv_valid=Sk, scale=scale)
+    else:
+        bq, bk = choose_attn_blocks(Sq, Sk, block_q, block_k)
+        interp = backend == "pallas_interpret"
+        qp = _pad_seq(_to_kernel(q), 2, bq)
+        kp = _pad_seq(_to_kernel(k), 2, bk)
+        vp = _pad_seq(_to_kernel(v), 2, bk)
+        # pad queries carry zero `do`, so their (finite) rebuilt weights
+        # contribute exactly zero to dk/dv; pad lse/di of 0 keep exp finite
+        dop = _pad_seq(_to_kernel(do), 2, bq)
+        lsep = _pad_seq(lse, 2, bq)
+        dip = _pad_seq(di, 2, bq)
+        dq = _k.flash_bwd_dq(qp, kp, vp, dop, lsep, dip, causal=causal,
+                             kv_valid=Sk, scale=scale, block_q=bq,
+                             block_k=bk, interpret=interp)[:, :, :Sq]
+        dk, dv = _k.flash_bwd_dkv(qp, kp, vp, dop, lsep, dip, causal=causal,
+                                  kv_valid=Sk, scale=scale, block_q=bq,
+                                  block_k=bk, interpret=interp)
+        dk, dv = dk[:, :, :Sk], dv[:, :, :Sk]
+    return (_to_kernel(dq).astype(q.dtype), _to_kernel(dk).astype(k.dtype),
+            _to_kernel(dv).astype(v.dtype))
+
+
+@functools.lru_cache(maxsize=None)
+def make_flash_attention(causal: bool, backend: Backend = "xla",
+                         block_q: int = 0, block_k: int = 0):
+    """One differentiable flash-attention function per static config —
+    lru-cached so jit tracing sees stable function identities (the same
+    discipline as core/switchback.make_switchback_matmul)."""
+    if backend not in BACKENDS:
+        raise ValueError(f"backend {backend!r} not in {BACKENDS}")
+
+    @jax.custom_vjp
+    def attn(q, k, v):
+        o, _ = flash_fwd_lse(q, k, v, causal=causal, backend=backend,
+                             block_q=block_q, block_k=block_k)
+        return o
+
+    def fwd(q, k, v):
+        o, lse = flash_fwd_lse(q, k, v, causal=causal, backend=backend,
+                               block_q=block_q, block_k=block_k)
+        return o, (q, k, v, o, lse)
+
+    attn.defvjp(fwd, functools.partial(_bwd_impl, causal, backend,
+                                       block_q, block_k))
+    return attn
+
+
+def flash_attention(q, k, v, *, causal: bool, backend: Backend = "xla",
+                    block_q: int = 0, block_k: int = 0):
+    """Differentiable fused attention, model layout.
+
+    q (B, Sq, H, hd); k, v (B, Sk, KV, hd) — KV heads stay folded (the
+    kernel maps query head h onto KV head h // group; no jnp.repeat).
+    Gradients flow to q, k, v via the recompute-style backward kernels.
+    """
+    return make_flash_attention(causal, backend, block_q, block_k)(q, k, v)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "block_k"))
+def decode_attention(q, k, v, kv_len, *, backend: Backend = "xla",
+                     block_k: int = 0):
+    """Single-query attention over the (ring) KV cache.
+
+    q (B, 1, H, hd); k, v (B, S_max, KV, hd) in the cache's storage layout;
+    kv_len (B,) int32 — valid cells per slot (``min(length + 1, S_max)``,
+    so ring-wrapped slots attend over the whole window). Returns
+    (B, 1, H, hd). Tiles beyond a slot's length are skipped dynamically on
+    the pallas backends.
+    """
+    B, one, H, hd = q.shape
+    assert one == 1, q.shape
+    S, KV = v.shape[1], v.shape[2]
+    assert H % KV == 0, (H, KV)
+    scale = 1.0 / math.sqrt(hd)
+    q3 = q[:, 0]                                             # (B, H, hd)
+    kv_len = kv_len.reshape(B, 1).astype(jnp.int32)
+    if backend == "xla":
+        return _ref.decode_fwd(q3, k, v, kv_len, scale=scale)[:, None]
+    # the block must divide S_max (padding the cache would copy it every
+    # step): honor the configured/default size when it divides, else the
+    # largest divisor not above it — e.g. S_max=96, block_k=128 -> 96
+    bk = min(block_k or DEFAULT_BLOCK, S)
+    while S % bk:
+        bk -= 1
+    o = _k.decode_fwd(q3, k, v, kv_len[:, 0], scale=scale, block_k=bk,
+                      interpret=(backend == "pallas_interpret"))
+    return o[:, None]

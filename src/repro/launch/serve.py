@@ -88,6 +88,11 @@ def main():
     ap.add_argument("--quant-mode", default="bf16")
     ap.add_argument("--kernel-backend", default="xla",
                     choices=("xla", "pallas", "pallas_interpret"))
+    ap.add_argument("--attn-block-q", type=int, default=0,
+                    help="flash-attention Q tile rows for prefill (0=auto)")
+    ap.add_argument("--attn-block-k", type=int, default=0,
+                    help="flash-attention KV tile rows, prefill + the "
+                         "decode ring-cache kernel (0 = auto)")
     ap.add_argument("--mesh", default="auto",
                     choices=("auto", "test", "single", "multi"))
     ap.add_argument("--devices", type=int, default=None,
@@ -101,7 +106,9 @@ def main():
     scfg = ServeConfig(max_batch=args.max_batch, max_len=args.max_len,
                        temperature=args.temperature,
                        quant_mode=args.quant_mode,
-                       kernel_backend=args.kernel_backend, seed=args.seed)
+                       kernel_backend=args.kernel_backend,
+                       attn_block_q=args.attn_block_q,
+                       attn_block_k=args.attn_block_k, seed=args.seed)
     try:
         engine = make_serve_engine(build(cfg), scfg, mesh)
     except NotImplementedError as e:

@@ -65,6 +65,14 @@ def main():
     ap.add_argument("--quant-mode", default="bf16")
     ap.add_argument("--kernel-backend", default="xla",
                     choices=("xla", "pallas", "pallas_interpret"))
+    ap.add_argument("--attn-impl", default="flash_scan",
+                    choices=("flash_scan", "dense"),
+                    help="XLA attention path (pallas backends use the "
+                         "fused flash kernels unless 'dense')")
+    ap.add_argument("--attn-block-q", type=int, default=0,
+                    help="flash-attention Q tile rows (0 = auto)")
+    ap.add_argument("--attn-block-k", type=int, default=0,
+                    help="flash-attention KV tile rows (0 = auto)")
     ap.add_argument("--optimizer", default="stable_adamw")
     ap.add_argument("--beta2", type=float, default=0.95)
     ap.add_argument("--loss-scaler", default="none")
@@ -86,7 +94,9 @@ def main():
     par = ParallelConfig(mesh_shape=tuple(mesh.devices.shape),
                          mesh_axes=tuple(mesh.axis_names),
                          fsdp=args.fsdp, pure_dp=args.pure_dp,
-                         remat="block")
+                         remat="block", attn_impl=args.attn_impl,
+                         attn_block_q=args.attn_block_q,
+                         attn_block_k=args.attn_block_k)
     tc = TrainConfig(optimizer=args.optimizer, learning_rate=args.lr,
                      warmup_steps=max(args.steps // 10, 1),
                      total_steps=args.steps, beta2=args.beta2,

@@ -1,14 +1,21 @@
 """Grouped-query attention with RoPE, flash-style chunked softmax, KV cache.
 
-Two implementations:
+Three implementations, selected by ``QuantPolicy.backend`` + the
+``attn_impl`` knob:
 
-* ``dense``      — materializes (B, H, Sq, Sk) scores; fine for short seqs.
+* ``dense``      — materializes (B, H, Sq, Sk) scores; fine for short
+                   seqs and the numerics oracle every other path is
+                   tested against.
 * ``flash_scan`` — online-softmax over KV chunks via lax.scan; the score
-                   matrix never exceeds (B, H, Sq, chunk). This is the
-                   TPU-idiomatic analogue of flash attention: blockwise
-                   compute with running max/denominator, driving peak
-                   activation memory from O(S²) to O(S·chunk). Used for the
-                   32k prefill shapes.
+                   matrix never exceeds (B, H, Sq, chunk). The pure-XLA
+                   fallback for the 32k prefill shapes.
+* ``pallas``     — the fused flash-attention kernels in
+                   kernels/flash_attention (fwd + custom-VJP bwd + decode
+                   ring-cache kernel), dispatched whenever the policy's
+                   kernel backend is ``pallas``/``pallas_interpret`` —
+                   the same one-knob discipline as the SwitchBack int8
+                   matmuls (DESIGN.md §9). GQA runs natively (no
+                   ``jnp.repeat`` head expansion on the kernel path).
 
 All projections route through ``quant_linear`` so SwitchBack (the paper's
 technique) applies to K/Q/V/out exactly as described in paper §1.
@@ -22,11 +29,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.precision import QuantPolicy, quant_linear
+from repro.kernels.flash_attention import ops as FA
 from repro.models import params as PRM
-from repro.models.common import apply_rope
+from repro.models.common import apply_rope, apply_rope_cached
 
 Array = jax.Array
 NEG_INF = -2.0e38
+
+# policy backends routed to the fused Pallas kernels; "xla" keeps the
+# dense / flash_scan reference paths
+FLASH_BACKENDS = ("pallas", "pallas_interpret")
 
 
 class KVCache(NamedTuple):
@@ -98,6 +110,11 @@ def flash_scan_attention(q: Array, k: Array, v: Array, *, causal: bool,
     Memory: O(B·H·Sq·chunk) scores instead of O(B·H·Sq·Sk). The scan keeps
     running (max, denominator, weighted-sum) per query — numerically
     identical to softmax attention up to fp error.
+
+    Chunks that are fully masked for *every* query are not scanned at all
+    (a static bound): trailing KV padding, and — for causal ``Sq == Sk`` —
+    anything past the last query's position. Queries whose whole window is
+    skipped (only possible for pad queries) come out zero.
     """
     B, Sq, H, hd = q.shape
     Sk = k.shape[1]
@@ -109,7 +126,17 @@ def flash_scan_attention(q: Array, k: Array, v: Array, *, causal: bool,
         Sk = k.shape[1]
     else:
         pad_mask_len = None
-    n_chunks = Sk // chunk
+    # static live-chunk bound: keys >= pad_mask_len are pad; with causal
+    # masking keys >= Sq are invisible to every query — either way the
+    # trailing chunks contribute exp(-inf) ≡ 0 and are skipped, so the
+    # XLA fallback stops paying matmuls for padding
+    limit = Sk if pad_mask_len is None else pad_mask_len
+    if causal:
+        limit = min(limit, Sq)
+    n_chunks = max(1, -(-limit // chunk))
+    k = k[:, :n_chunks * chunk]
+    v = v[:, :n_chunks * chunk]
+    Sk = k.shape[1]
     scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
     qf = q.astype(jnp.float32) * scale
     kc = k.reshape(B, n_chunks, chunk, H, hd)
@@ -146,9 +173,30 @@ def flash_scan_attention(q: Array, k: Array, v: Array, *, causal: bool,
     return jnp.transpose(out, (0, 2, 1, 3)).astype(q.dtype)   # (B,Sq,H,hd)
 
 
+def _core_attention(q: Array, k: Array, v: Array, *, causal: bool,
+                    policy: QuantPolicy, impl: str = "flash_scan",
+                    block_q: int = 0, block_k: int = 0) -> Array:
+    """Backend-dispatched attention core. q (B, Sq, H, hd); k, v
+    (B, Sk, KV, hd) with KV heads *folded* — the Pallas kernels consume
+    GQA natively (BlockSpec maps query head h to KV head h // group); the
+    XLA paths expand heads with ``jnp.repeat`` as before. ``impl="dense"``
+    forces the oracle regardless of backend."""
+    if impl != "dense" and policy.backend in FLASH_BACKENDS:
+        return FA.flash_attention(q, k, v, causal=causal,
+                                  backend=policy.backend,
+                                  block_q=block_q, block_k=block_k)
+    n_heads = q.shape[2]
+    kx = _expand_kv(k, n_heads)
+    vx = _expand_kv(v, n_heads)
+    if impl == "flash_scan" and q.shape[1] > 2048:
+        return flash_scan_attention(q, kx, vx, causal=causal)
+    return dense_attention(q, kx, vx, causal=causal)
+
+
 def attention_block(x: Array, p: dict, cfg, policy: QuantPolicy, *,
                     positions: Array, causal: bool = True,
-                    impl: str = "flash_scan") -> Array:
+                    impl: str = "flash_scan", block_q: int = 0,
+                    block_k: int = 0) -> Array:
     """Full self-attention sub-block: QKV proj -> RoPE -> attn -> out proj."""
     q, k, v = qkv_project(x, p, cfg, policy)
     q = apply_rope(q, positions, cfg.rope_theta)
@@ -157,12 +205,8 @@ def attention_block(x: Array, p: dict, cfg, policy: QuantPolicy, *,
     # the model axis on seq; attention internals shard heads instead
     q = PRM.constrain(q, ("batch", None, "heads", None))
     k = PRM.constrain(k, ("batch", None, "kv_heads", None))
-    kx = _expand_kv(k, cfg.n_heads)
-    vx = _expand_kv(v, cfg.n_heads)
-    if impl == "flash_scan" and x.shape[1] > 2048:
-        o = flash_scan_attention(q, kx, vx, causal=causal)
-    else:
-        o = dense_attention(q, kx, vx, causal=causal)
+    o = _core_attention(q, k, v, causal=causal, policy=policy, impl=impl,
+                        block_q=block_q, block_k=block_k)
     o = o.reshape(x.shape[0], x.shape[1], cfg.n_heads * cfg.hd)
     wo = PRM.use_weight(p["wo"], ("heads", "embed"), policy.compute_dtype)
     return quant_linear(o, wo, policy=policy)
@@ -179,7 +223,9 @@ def init_kv_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
 
 
 def attention_decode_step(x: Array, cache: KVCache, p: dict, cfg,
-                          policy: QuantPolicy) -> tuple[Array, KVCache]:
+                          policy: QuantPolicy, *, rope_cache=None,
+                          impl: str = "flash_scan",
+                          block_k: int = 0) -> tuple[Array, KVCache]:
     """One-token decode: x (B, 1, D); cache holds `length` past tokens.
 
     With a scalar cache length every row writes at the same offset; with a
@@ -188,6 +234,15 @@ def attention_decode_step(x: Array, cache: KVCache, p: dict, cfg,
     valid cells. RoPE is applied at write time with the token's absolute
     position, so a wrapped (sliding-window) cache needs no per-cell
     position bookkeeping — the rotation is already baked into stored keys.
+    ``rope_cache=(cos, sin)`` rows pre-gathered for this step's positions
+    (the serve engine hoists the tables; see models/common.rope_tables)
+    replaces the in-layer cos/sin computation bit-identically.
+
+    On the Pallas backends the re-attend runs the fused decode kernel:
+    per-slot lengths ride into the kernel and tiles beyond a slot's valid
+    prefix are skipped dynamically, instead of the dense full-``S_max``
+    re-attend the XLA path pays. ``impl="dense"`` forces the oracle on
+    every backend (the same escape hatch as ``attention_block``).
     """
     B = x.shape[0]
     per_slot = cache.length.ndim == 1
@@ -197,23 +252,33 @@ def attention_decode_step(x: Array, cache: KVCache, p: dict, cfg,
     else:
         pos = jnp.broadcast_to(cache.length[None, None], (B, 1))
     q, k, v = qkv_project(x, p, cfg, policy)
-    q = apply_rope(q, pos, cfg.rope_theta)
-    k = apply_rope(k, pos, cfg.rope_theta)
+    if rope_cache is not None:
+        q = apply_rope_cached(q, *rope_cache)
+        k = apply_rope_cached(k, *rope_cache)
+    else:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
     if per_slot:
         write_at = cache.length % S_max                  # ring write position
         rows = jnp.arange(B)
         k_cache = cache.k.at[rows, write_at].set(k[:, 0].astype(cache.k.dtype))
         v_cache = cache.v.at[rows, write_at].set(v[:, 0].astype(cache.v.dtype))
-        kv_len = jnp.minimum(cache.length + 1, S_max)[:, None, None, None]
+        valid = jnp.minimum(cache.length + 1, S_max)     # (B,)
+        kv_len = valid[:, None, None, None]
     else:
         k_cache = jax.lax.dynamic_update_slice_in_dim(
             cache.k, k.astype(cache.k.dtype), cache.length, axis=1)
         v_cache = jax.lax.dynamic_update_slice_in_dim(
             cache.v, v.astype(cache.v.dtype), cache.length, axis=1)
+        valid = jnp.broadcast_to(cache.length + 1, (B,))
         kv_len = cache.length + 1
-    kx = _expand_kv(k_cache, cfg.n_heads)
-    vx = _expand_kv(v_cache, cfg.n_heads)
-    o = dense_attention(q, kx, vx, causal=False, kv_len=kv_len)
+    if impl != "dense" and policy.backend in FLASH_BACKENDS:
+        o = FA.decode_attention(q, k_cache, v_cache, valid,
+                                backend=policy.backend, block_k=block_k)
+    else:
+        kx = _expand_kv(k_cache, cfg.n_heads)
+        vx = _expand_kv(v_cache, cfg.n_heads)
+        o = dense_attention(q, kx, vx, causal=False, kv_len=kv_len)
     o = o.reshape(B, 1, cfg.n_heads * cfg.hd)
     wo = PRM.use_weight(p["wo"], ("heads", "embed"), policy.compute_dtype)
     out = quant_linear(o, wo, policy=policy)
@@ -221,8 +286,9 @@ def attention_decode_step(x: Array, cache: KVCache, p: dict, cfg,
 
 
 def attention_prefill(x: Array, cache: KVCache, p: dict, cfg,
-                      policy: QuantPolicy, *, admit: Array
-                      ) -> tuple[Array, KVCache]:
+                      policy: QuantPolicy, *, admit: Array, rope_cache=None,
+                      impl: str = "flash_scan", block_q: int = 0,
+                      block_k: int = 0) -> tuple[Array, KVCache]:
     """Full-prompt attention that also seeds the serve cache.
 
     x: (B, S, D) prompts padded to S (S <= S_max); ``admit``: (B,) bool —
@@ -238,13 +304,20 @@ def attention_prefill(x: Array, cache: KVCache, p: dict, cfg,
     assert cache.length.ndim == 1, "prefill needs a per-slot (serve) cache"
     positions = jnp.arange(S)
     q, k, v = qkv_project(x, p, cfg, policy)
-    q = apply_rope(q, positions, cfg.rope_theta)
-    k = apply_rope(k, positions, cfg.rope_theta)
+    if rope_cache is not None:
+        q = apply_rope_cached(q, *rope_cache)
+        k = apply_rope_cached(k, *rope_cache)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
     q = PRM.constrain(q, ("batch", None, "heads", None))
     k = PRM.constrain(k, ("batch", None, "kv_heads", None))
-    kx = _expand_kv(k, cfg.n_heads)
-    vx = _expand_kv(v, cfg.n_heads)
-    o = dense_attention(q, kx, vx, causal=True)
+    # the prefill attention must match attention_block's forward on the
+    # same tokens (the serve parity invariant): both dispatch through the
+    # same (impl, backend) rule — flash kernels on pallas*, dense (or
+    # flash_scan past its threshold) on xla, oracle under impl="dense"
+    o = _core_attention(q, k, v, causal=True, policy=policy, impl=impl,
+                        block_q=block_q, block_k=block_k)
     o = o.reshape(B, S, cfg.n_heads * cfg.hd)
     wo = PRM.use_weight(p["wo"], ("heads", "embed"), policy.compute_dtype)
     out = quant_linear(o, wo, policy=policy)
@@ -257,16 +330,16 @@ def attention_prefill(x: Array, cache: KVCache, p: dict, cfg,
 
 
 def cross_attention(x: Array, enc_kv: tuple[Array, Array], p: dict, cfg,
-                    policy: QuantPolicy) -> Array:
+                    policy: QuantPolicy, *, impl: str = "flash_scan",
+                    block_q: int = 0, block_k: int = 0) -> Array:
     """Encoder-decoder cross attention; enc_kv are precomputed (B,Se,KV,hd)."""
     B, S, _ = x.shape
     wq = PRM.use_weight(p["wq"], ("embed", "heads"), policy.compute_dtype)
     q = quant_linear(x, wq, policy=policy).reshape(
         B, S, cfg.n_heads, cfg.hd)
     k, v = enc_kv
-    kx = _expand_kv(k, cfg.n_heads)
-    vx = _expand_kv(v, cfg.n_heads)
-    o = dense_attention(q, kx, vx, causal=False)
+    o = _core_attention(q, k, v, causal=False, policy=policy, impl=impl,
+                        block_q=block_q, block_k=block_k)
     o = o.reshape(B, S, cfg.n_heads * cfg.hd)
     wo = PRM.use_weight(p["wo"], ("heads", "embed"), policy.compute_dtype)
     return quant_linear(o, wo, policy=policy)

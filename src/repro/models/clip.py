@@ -55,7 +55,10 @@ def text_forward(params, tokens: Array, cfg: CLIPConfig,
     x = PRM.constrain(x, ("batch", "seq", "embed"))
 
     def body(xx, lp):
-        xx, _ = vit_block(xx, lp, cfg.text_heads, policy, causal=True)
+        xx, _ = vit_block(xx, lp, cfg.text_heads, policy, causal=True,
+                          impl=parallel.attn_impl,
+                          block_q=parallel.attn_block_q,
+                          block_k=parallel.attn_block_k)
         return xx, None
 
     blk = (jax.checkpoint(lambda c, lw: body(c, lw))

@@ -67,6 +67,33 @@ def apply_rope(x: Array, positions: Array, theta: float) -> Array:
     return out.astype(x.dtype)
 
 
+def rope_tables(head_dim: int, theta: float, max_pos: int
+                ) -> tuple[Array, Array]:
+    """Precomputed (cos, sin) tables, each (max_pos, head_dim/2) f32.
+
+    Row ``p`` holds exactly the values ``apply_rope`` computes for position
+    ``p`` (same f32 multiply then cos/sin), so gathering rows and applying
+    :func:`apply_rope_cached` is bit-identical to the on-the-fly path —
+    the serve engine hoists these out of the per-layer (and, for decode,
+    per-step) hot path as jit-time constants.
+    """
+    ang = (jnp.arange(max_pos, dtype=jnp.float32)[:, None]
+           * rope_freqs(head_dim, theta))
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope_cached(x: Array, cos: Array, sin: Array) -> Array:
+    """x: (B, S, H, hd); cos/sin: (S, hd/2) or (B, S, hd/2) gathered rows
+    of :func:`rope_tables`. Same rotation (and op order) as apply_rope."""
+    if cos.ndim == 2:
+        cos, sin = cos[None], sin[None]
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
 def activation(h: Array, gate: Array | None, act: str) -> Array:
     if act == "swiglu":
         assert gate is not None

@@ -78,11 +78,13 @@ def _dec_layer(x, lp, cfg, policy, parallel, positions, enc_out,
                                 impl=parallel.attn_impl)
     else:
         a, new_cache = ATT.attention_decode_step(h, self_cache, lp["attn"],
-                                                 cfg, policy)
+                                                 cfg, policy,
+                                                 impl=parallel.attn_impl)
     x = x + apply_layer_scale(lp.get("gamma1"), a)
     h = apply_norm(x, lp["norm_x"], cfg.norm, cfg.norm_eps)
     enc_kv = ATT.encode_cross_kv(enc_out, lp["xattn"], cfg, policy)
-    c = ATT.cross_attention(h, enc_kv, lp["xattn"], cfg, policy)
+    c = ATT.cross_attention(h, enc_kv, lp["xattn"], cfg, policy,
+                            impl=parallel.attn_impl)
     x = x + apply_layer_scale(lp.get("gamma_x"), c)
     h = apply_norm(x, lp["norm2"], cfg.norm, cfg.norm_eps)
     m = mlp_block(h, lp["mlp"], cfg, policy)

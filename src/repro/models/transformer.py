@@ -209,7 +209,8 @@ def param_specs(cfg: ModelConfig) -> Dict[str, Any]:
 
 def _layer_apply(x: Array, lp: Dict, cfg: ModelConfig, policy: QuantPolicy,
                  parallel: ParallelConfig, layer_idx: int, *,
-                 positions: Array, state=None, prefill=None):
+                 positions: Array, state=None, prefill=None,
+                 rope_cache=None):
     """One transformer layer. Returns (x, new_state, aux_loss).
 
     ``prefill=(admit, prompt_lens)`` is the serving admission mode: the
@@ -217,11 +218,14 @@ def _layer_apply(x: Array, lp: Dict, cfg: ModelConfig, policy: QuantPolicy,
     forward plus an admit-masked cache write into ``state``) and admitted
     slots' lengths reset to their prompt length; everything after the
     sequence mixer is the shared layer body, so serve prefill can't drift
-    from the training forward."""
+    from the training forward. ``rope_cache=(cos, sin)`` — pre-gathered
+    RoPE table rows for this call's positions, hoisted once per step by
+    the serve engine instead of recomputed per layer."""
     kind = cfg.layer_kind(layer_idx)
     aux = jnp.zeros((), jnp.float32)
     g1 = lp.get("gamma1")
     g2 = lp.get("gamma2")
+    bq, bk = parallel.attn_block_q, parallel.attn_block_k
 
     h = apply_norm(x, lp["norm1"], cfg.norm, cfg.norm_eps)
     new_state = state
@@ -229,16 +233,23 @@ def _layer_apply(x: Array, lp: Dict, cfg: ModelConfig, policy: QuantPolicy,
         if prefill is not None:
             admit, prompt_lens = prefill
             a, new_state = ATT.attention_prefill(h, state, lp["attn"],
-                                                 cfg, policy, admit=admit)
+                                                 cfg, policy, admit=admit,
+                                                 rope_cache=rope_cache,
+                                                 impl=parallel.attn_impl,
+                                                 block_q=bq, block_k=bk)
             new_state = new_state._replace(
                 length=jnp.where(admit, prompt_lens, new_state.length))
         elif state is None:
             a = ATT.attention_block(h, lp["attn"], cfg, policy,
                                     positions=positions,
-                                    impl=parallel.attn_impl)
+                                    impl=parallel.attn_impl,
+                                    block_q=bq, block_k=bk)
         else:
             a, new_state = ATT.attention_decode_step(h, state, lp["attn"],
-                                                     cfg, policy)
+                                                     cfg, policy,
+                                                     rope_cache=rope_cache,
+                                                     impl=parallel.attn_impl,
+                                                     block_k=bk)
     elif kind == "mamba":
         a, new_state = mamba_block(h, lp["mamba"], cfg, policy, state=state)
     else:  # rwkv
@@ -266,7 +277,8 @@ def _layer_apply(x: Array, lp: Dict, cfg: ModelConfig, policy: QuantPolicy,
 
 def group_apply(x: Array, gp: Dict[str, Dict], cfg: ModelConfig,
                 policy: QuantPolicy, parallel: ParallelConfig, *,
-                positions: Array, states: Optional[Dict] = None):
+                positions: Array, states: Optional[Dict] = None,
+                rope_cache=None):
     """Apply one period-group (P heterogeneous layers unrolled).
     gp: {"pos{i}": layer params (unstacked)}. Returns (x, new_states, aux)."""
     P = period(cfg)
@@ -275,7 +287,8 @@ def group_apply(x: Array, gp: Dict[str, Dict], cfg: ModelConfig,
     for i in range(P):
         st = states.get(f"pos{i}") if states is not None else None
         x, ns, aux = _layer_apply(x, gp[f"pos{i}"], cfg, policy, parallel, i,
-                                  positions=positions, state=st)
+                                  positions=positions, state=st,
+                                  rope_cache=rope_cache)
         aux_total = aux_total + aux
         if states is not None:
             new_states[f"pos{i}"] = ns
@@ -422,12 +435,18 @@ def decode_state_logical_axes(cfg: ModelConfig):
 
 
 def decode_step(params, states, tokens: Array, cfg: ModelConfig,
-                policy: QuantPolicy, parallel: ParallelConfig):
-    """One-token decode. tokens: (B, 1). Returns (logits (B,1,V), states)."""
+                policy: QuantPolicy, parallel: ParallelConfig, *,
+                rope_cache=None):
+    """One-token decode. tokens: (B, 1). Returns (logits (B,1,V), states).
+
+    ``rope_cache=(cos, sin)`` — this step's pre-gathered RoPE rows (shape
+    (B, 1, hd/2)); the serve engine gathers them once per step from its
+    hoisted tables so layers skip the cos/sin recompute."""
     x = embed_input(params, tokens, cfg, policy)
     positions = jnp.arange(1)   # RoPE position comes from cache length inside
     body = functools.partial(group_apply, cfg=cfg, policy=policy,
-                             parallel=parallel, positions=positions)
+                             parallel=parallel, positions=positions,
+                             rope_cache=rope_cache)
 
     def scan_body(x, inp):
         gp, st = inp
@@ -498,7 +517,8 @@ def serve_state_logical_axes(cfg: ModelConfig):
 
 def serve_prefill(params, states, tokens: Array, prompt_lens: Array,
                   admit: Array, cfg: ModelConfig, policy: QuantPolicy,
-                  parallel: ParallelConfig, *, last_only: bool = False):
+                  parallel: ParallelConfig, *, last_only: bool = False,
+                  rope_cache=None):
     """Seed admitted slots' caches from their (padded) prompts.
 
     tokens: (B, S) prompts right-padded to a common S <= max_len;
@@ -526,7 +546,7 @@ def serve_prefill(params, states, tokens: Array, prompt_lens: Array,
             xx, new_st[f"pos{i}"], _ = _layer_apply(
                 xx, gp[f"pos{i}"], cfg, policy, parallel, i,
                 positions=positions, state=st[f"pos{i}"],
-                prefill=(admit, prompt_lens))
+                prefill=(admit, prompt_lens), rope_cache=rope_cache)
         return xx, new_st
 
     if parallel.scan_layers and n_groups(cfg) > 1:

@@ -82,7 +82,8 @@ def vision_param_specs(cfg: CLIPConfig) -> Dict[str, Any]:
     }
 
 
-def _attn(x, p, heads, policy, causal):
+def _attn(x, p, heads, policy, causal, impl="flash_scan", block_q=0,
+          block_k=0):
     B, S, W = x.shape
     hd = W // heads
     cd = policy.compute_dtype
@@ -93,8 +94,11 @@ def _attn(x, p, heads, policy, causal):
                      policy=policy).reshape(B, S, heads, hd)
     v = quant_linear(x, uw("wv", ("embed", "heads")), p["bv"],
                      policy=policy).reshape(B, S, heads, hd)
-    from repro.models.attention import dense_attention
-    o = dense_attention(q, k, v, causal=causal).reshape(B, S, W)
+    # same backend rule as the LM towers: the policy's kernel backend
+    # flips both towers of the paper's CLIP onto the fused flash kernels
+    from repro.models.attention import _core_attention
+    o = _core_attention(q, k, v, causal=causal, policy=policy, impl=impl,
+                        block_q=block_q, block_k=block_k).reshape(B, S, W)
     return quant_linear(o, uw("wo", ("heads", "embed")), p["bo"],
                         policy=policy)
 
@@ -109,9 +113,10 @@ def _mlp(x, p, policy):
 
 
 def vit_block(x, lp, heads: int, policy: QuantPolicy, causal: bool = False,
-              collect_stats: bool = False):
+              collect_stats: bool = False, impl: str = "flash_scan",
+              block_q: int = 0, block_k: int = 0):
     h = layer_norm(x, lp["norm1"]["scale"], lp["norm1"]["bias"])
-    a = _attn(h, lp["attn"], heads, policy, causal)
+    a = _attn(h, lp["attn"], heads, policy, causal, impl, block_q, block_k)
     x = x + apply_layer_scale(lp.get("gamma1"), a)
     h = layer_norm(x, lp["norm2"]["scale"], lp["norm2"]["bias"])
     m = _mlp(h, lp["mlp"], policy)
@@ -167,7 +172,10 @@ def vision_forward(params, images_or_patches: Array, cfg: CLIPConfig,
     def body(carry, lp):
         xx = carry
         xx, stat = vit_block(xx, lp, cfg.vision_heads, policy,
-                             collect_stats=collect_stats)
+                             collect_stats=collect_stats,
+                             impl=parallel.attn_impl,
+                             block_q=parallel.attn_block_q,
+                             block_k=parallel.attn_block_k)
         return xx, stat
 
     blk = (jax.checkpoint(body) if parallel.remat != "none" else body)

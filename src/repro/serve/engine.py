@@ -20,7 +20,11 @@ Quantized serving is the point: with ``quant_mode=int8_switchback*`` every
 linear runs the same ``kernels/switchback`` forward ops as training
 (``kernel_backend ∈ {xla, pallas, pallas_interpret}``) — and since
 inference never needs the 16-bit wgrad "switch back", the int8 fast path
-is the *whole* matmul story (DESIGN.md §8).
+is the *whole* matmul story (DESIGN.md §8). The same backend knob routes
+the attention re-attend through the fused ``kernels/flash_attention``
+decode kernel (per-slot lengths, dynamic tile skip over the ring cache)
+and prefill through the flash forward; RoPE cos/sin tables are hoisted to
+engine constants so neither path recomputes them per layer (DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -270,7 +274,9 @@ def make_serve_engine(model, serve_cfg: ServeConfig, mesh: Mesh, *,
 
     parallel = parallel or ParallelConfig(
         mesh_shape=tuple(mesh.devices.shape),
-        mesh_axes=tuple(mesh.axis_names), remat="none")
+        mesh_axes=tuple(mesh.axis_names), remat="none",
+        attn_block_q=serve_cfg.attn_block_q,
+        attn_block_k=serve_cfg.attn_block_k)
     assert tuple(mesh.axis_names) == tuple(parallel.mesh_axes), (
         f"mesh axes {mesh.axis_names} != ParallelConfig.mesh_axes "
         f"{parallel.mesh_axes}")
@@ -288,12 +294,37 @@ def make_serve_engine(model, serve_cfg: ServeConfig, mesh: Mesh, *,
         cache_abs, TF.serve_state_logical_axes(cfg), mesh, rules)
     repl = NamedSharding(mesh, P())
 
+    # RoPE tables hoisted to engine constants: cos/sin rows for positions
+    # [0, max_len) computed once at build time instead of per layer (and,
+    # for decode, per step). Gathered rows are bit-identical to the
+    # on-the-fly apply_rope (models/common.rope_tables), so parity with
+    # the training forward is untouched. With rollover the ring keeps
+    # absolute positions past max_len — fall back to on-the-fly RoPE.
+    if serve_cfg.rollover:
+        rope_cos = rope_sin = None
+    else:
+        from repro.models.common import rope_tables
+        rope_cos, rope_sin = rope_tables(cfg.hd, cfg.rope_theta,
+                                         serve_cfg.max_len)
+
     def prefill_fn(p, st, toks, lens, admit):
+        rc = (None if rope_cos is None else
+              (rope_cos[:toks.shape[1]], rope_sin[:toks.shape[1]]))
         return TF.serve_prefill(p, st, toks, lens, admit, cfg, policy,
-                                parallel, last_only=True)
+                                parallel, last_only=True, rope_cache=rc)
 
     def decode_fn(p, st, toks):
-        return TF.decode_step(p, st, toks, cfg, policy, parallel)
+        if rope_cos is None:
+            rc = None
+        else:
+            # every slot's length advances in lockstep across layers; row
+            # 0 of the stacked (G, B) lengths is this step's positions.
+            # Idle slots can run past max_len (their garbage is evicted
+            # by admission); the gather clamps, garbage stays garbage.
+            pos = next(iter(st.values())).length[0]
+            rc = (rope_cos[pos][:, None], rope_sin[pos][:, None])
+        return TF.decode_step(p, st, toks, cfg, policy, parallel,
+                              rope_cache=rc)
 
     # out_shardings pin the returned cache to the canonical layout — without
     # this GSPMD may pick a different (e.g. hd-over-model) layout for the
