@@ -1,18 +1,36 @@
 """Batched-decode throughput through the ServeEngine: tokens/s vs batch
 size x kernel backend (continuous batching with the int8 SwitchBack
-forward path — the inference-side half of the paper's speed claim).
+forward path — the inference-side half of the paper's speed claim), plus
+the PagedServe prefix-reuse benchmark.
 
     PYTHONPATH=src python -m benchmarks.bench_serve --max-batch 8 \
         --new-tokens 32 --out results/bench/serve.json
 
-Each row serves ``batch`` synthetic requests through a ``batch``-slot
-engine (one prefill wave, then pure batched decode), so
-``decode_tokens_per_s`` isolates the decode step's batching efficiency:
-the per-step cost is dominated by weight traffic, which is amortized over
-slots, so throughput must rise monotonically batch 1 -> max_batch — the
-acceptance check this benchmark prints. Backends: ``xla`` is the
-dot_general path, ``pallas_interpret`` runs the real Pallas SwitchBack
-kernel grid interpreted on CPU (slow; parity validation, not speed).
+    # CI-sized run (throughput grid + prefix workload), committed rows:
+    PYTHONPATH=src python -m benchmarks.bench_serve --smoke \
+        --out results/bench/serve.json
+
+Two row kinds land in the JSON:
+
+* ``bench: "serve"`` — throughput grid. Each row serves ``batch``
+  synthetic requests through a ``batch``-slot engine (one prefill wave,
+  then pure batched decode), so ``decode_tokens_per_s`` isolates the
+  decode step's batching efficiency: per-step cost is dominated by
+  weight traffic, amortized over slots, so throughput must rise
+  monotonically batch 1 -> max_batch — the acceptance check this
+  benchmark prints. Rows also carry TTFT / inter-token-latency
+  percentiles from the engine's per-request stats.
+* ``bench: "serve_prefix"`` — the paged-vs-ring prefix workload:
+  ``n_requests`` requests share a long system prompt (distinct tails)
+  through a small-batch engine, so later admission waves adopt the
+  shared prefix from the radix cache. The row reports the prefix-cache
+  hit rate, prefill tokens saved vs the ring run, and peak cache bytes
+  vs the ring cache's fixed ``max_batch × max_len`` footprint — the
+  PR-5 acceptance asks >= 50% prefill-token savings here, and the run
+  fails loudly if generations diverge from the ring oracle.
+
+Backends: ``xla`` is the dot_general path, ``pallas_interpret`` runs the
+real Pallas kernel grids interpreted on CPU (parity, not speed).
 """
 from __future__ import annotations
 
@@ -32,13 +50,17 @@ from repro.launch.mesh import make_test_mesh
 from repro.models import build
 from repro.serve import make_serve_engine
 
+LAT_KEYS = ("ttft_p50_s", "ttft_p95_s", "itl_p50_s", "itl_p95_s")
+
 
 def bench_row(arch: str, params_host, *, batch: int, backend: str,
               quant_mode: str, prompt_len: int, new_tokens: int,
-              max_len: int, repeats: int = 3) -> dict:
+              max_len: int, cache_mode: str = "ring", block_size: int = 16,
+              repeats: int = 3) -> dict:
     cfg = get_reduced_config(arch)
     scfg = ServeConfig(max_batch=batch, max_len=max_len,
-                       quant_mode=quant_mode, kernel_backend=backend)
+                       quant_mode=quant_mode, kernel_backend=backend,
+                       cache_mode=cache_mode, block_size=block_size)
     engine = make_serve_engine(build(cfg), scfg, make_test_mesh((1, 1)))
     params = engine.shard_params(params_host)
     rng = np.random.default_rng(0)
@@ -53,23 +75,80 @@ def bench_row(arch: str, params_host, *, batch: int, backend: str,
         if stats is None or s["decode_tokens_per_s"] > stats[
                 "decode_tokens_per_s"]:
             stats = s
-    return {"bench": "serve", "arch": arch, "backend": backend,
+    row = {"bench": "serve", "arch": arch, "backend": backend,
+           "quant_mode": quant_mode, "cache_mode": cache_mode,
+           "max_batch": batch, "n_requests": batch,
+           "prompt_len": prompt_len, "new_tokens": new_tokens,
+           "new_tokens_total": stats["new_tokens"],
+           "wall_s": stats["wall_s"], "decode_s": stats["decode_s"],
+           "prefill_s": stats["prefill_s"],
+           "decode_steps": stats["decode_steps"],
+           "prefill_calls": stats["prefill_calls"],
+           "tokens_per_s": stats["tokens_per_s"],
+           "decode_tokens_per_s": stats["decode_tokens_per_s"]}
+    row.update({k: stats[k] for k in LAT_KEYS})
+    return row
+
+
+def prefix_row(arch: str, params_host, *, batch: int, n_requests: int,
+               sys_prompt_len: int, tail_len: int, new_tokens: int,
+               quant_mode: str, backend: str, block_size: int) -> dict:
+    """Prefix-heavy workload: n_requests share a sys_prompt_len-token
+    system prompt (distinct tails) through a batch-slot engine. The paged
+    run must 1) generate exactly the ring run's tokens and 2) skip the
+    shared prefix's prefill FLOPs via the radix cache."""
+    cfg = get_reduced_config(arch)
+    max_len = sys_prompt_len + tail_len + new_tokens + block_size
+    rng = np.random.default_rng(1)
+    sysp = rng.integers(0, cfg.vocab_size, size=sys_prompt_len).tolist()
+    prompts = [sysp + rng.integers(0, cfg.vocab_size, size=tail_len).tolist()
+               for _ in range(n_requests)]
+    mesh = make_test_mesh((1, 1))
+    gens, stats = {}, {}
+    for mode in ("ring", "paged"):
+        scfg = ServeConfig(max_batch=batch, max_len=max_len,
+                           quant_mode=quant_mode, kernel_backend=backend,
+                           cache_mode=mode, block_size=block_size)
+        engine = make_serve_engine(build(cfg), scfg, mesh)
+        params = engine.shard_params(params_host)
+        engine.generate(params, prompts[:batch], max_new_tokens=2)  # warmup
+        gens[mode], stats[mode] = engine.generate(
+            params, prompts, max_new_tokens=new_tokens)
+    assert gens["paged"] == gens["ring"], \
+        "paged generations diverged from the ring oracle"
+    ring_tok, paged_tok = (stats[m]["prefill_tokens"] for m in
+                           ("ring", "paged"))
+    saved_frac = 1.0 - paged_tok / max(ring_tok, 1)
+    return {"bench": "serve_prefix", "arch": arch, "backend": backend,
             "quant_mode": quant_mode, "max_batch": batch,
-            "n_requests": batch, "prompt_len": prompt_len,
-            "new_tokens": new_tokens,
-            "new_tokens_total": stats["new_tokens"],
-            "wall_s": stats["wall_s"], "decode_s": stats["decode_s"],
-            "prefill_s": stats["prefill_s"],
-            "decode_steps": stats["decode_steps"],
-            "prefill_calls": stats["prefill_calls"],
-            "tokens_per_s": stats["tokens_per_s"],
-            "decode_tokens_per_s": stats["decode_tokens_per_s"]}
+            "n_requests": n_requests, "sys_prompt_len": sys_prompt_len,
+            "tail_len": tail_len, "new_tokens": new_tokens,
+            "block_size": block_size,
+            "ring_prefill_tokens": ring_tok,
+            "paged_prefill_tokens": paged_tok,
+            "prefill_tokens_saved": stats["paged"]["prefill_tokens_saved"],
+            "prefill_saved_frac": saved_frac,
+            "prefix_hit_rate": stats["paged"]["prefix_hit_rate"],
+            "prefix_hits": stats["paged"]["prefix_hits"],
+            "prefix_lookups": stats["paged"]["prefix_lookups"],
+            "peak_blocks_in_use": stats["paged"]["peak_blocks_in_use"],
+            "peak_live_blocks": stats["paged"]["peak_live_blocks"],
+            "peak_cache_bytes": stats["paged"]["peak_cache_bytes"],
+            "ring_cache_bytes": stats["paged"]["ring_equiv_cache_bytes"],
+            "paged_ttft_p50_s": stats["paged"]["ttft_p50_s"],
+            "ring_ttft_p50_s": stats["ring"]["ttft_p50_s"],
+            "paged_itl_p50_s": stats["paged"]["itl_p50_s"],
+            "ring_itl_p50_s": stats["ring"]["itl_p50_s"],
+            "tokens_match_ring": True}
 
 
 def run(out_json: str | None = None, *, arch: str = "smollm-360m",
         max_batch: int = 8, prompt_len: int = 8, new_tokens: int = 32,
         quant_mode: str = "int8_switchback",
-        backends: tuple = ("xla",), repeats: int = 3) -> list:
+        backends: tuple = ("xla",), repeats: int = 3,
+        cache_modes: tuple = ("ring", "paged"), block_size: int = 16,
+        prefix: bool = True, sys_prompt_len: int = 48, tail_len: int = 6,
+        prefix_requests: int = 8) -> list:
     batches = []
     b = 1
     while b < max_batch:
@@ -83,27 +162,54 @@ def run(out_json: str | None = None, *, arch: str = "smollm-360m",
     params_host = init_params(build(get_reduced_config(arch)).param_specs,
                               random.PRNGKey(0))
     rows = []
-    print(f"{'backend':>16} {'batch':>6} | {'decode tok/s':>12} "
-          f"{'tok/s':>8} {'wall_s':>7}")
+    print(f"{'backend':>16} {'cache':>6} {'batch':>6} | {'decode tok/s':>12} "
+          f"{'tok/s':>8} {'itl p50 ms':>10} {'wall_s':>7}")
+    ok = True
     for backend in backends:
-        series = []
-        for batch in batches:
-            row = bench_row(arch, params_host, batch=batch, backend=backend,
-                            quant_mode=quant_mode, prompt_len=prompt_len,
-                            new_tokens=new_tokens, max_len=max_len,
-                            repeats=repeats)
-            rows.append(row)
-            series.append(row["decode_tokens_per_s"])
-            print(f"{backend:>16} {batch:>6} | "
-                  f"{row['decode_tokens_per_s']:12.1f} "
-                  f"{row['tokens_per_s']:8.1f} {row['wall_s']:7.2f}")
-        mono = all(a < b for a, b in zip(series, series[1:]))
-        print(f"{backend:>16} decode tok/s monotonic over batch: "
-              f"{'yes' if mono else 'NO'}")
+        for cache_mode in cache_modes:
+            series = []
+            for batch in batches:
+                row = bench_row(arch, params_host, batch=batch,
+                                backend=backend, quant_mode=quant_mode,
+                                prompt_len=prompt_len,
+                                new_tokens=new_tokens, max_len=max_len,
+                                cache_mode=cache_mode,
+                                block_size=block_size, repeats=repeats)
+                rows.append(row)
+                series.append(row["decode_tokens_per_s"])
+                print(f"{backend:>16} {cache_mode:>6} {batch:>6} | "
+                      f"{row['decode_tokens_per_s']:12.1f} "
+                      f"{row['tokens_per_s']:8.1f} "
+                      f"{row['itl_p50_s']*1e3:10.2f} "
+                      f"{row['wall_s']:7.2f}")
+            mono = all(a < b for a, b in zip(series, series[1:]))
+            print(f"{backend:>16} {cache_mode:>6} decode tok/s monotonic "
+                  f"over batch: {'yes' if mono else 'NO'}")
+        if prefix:
+            prow = prefix_row(arch, params_host, batch=2,
+                              n_requests=prefix_requests,
+                              sys_prompt_len=sys_prompt_len,
+                              tail_len=tail_len, new_tokens=new_tokens,
+                              quant_mode=quant_mode, backend=backend,
+                              block_size=block_size)
+            rows.append(prow)
+            print(f"{backend:>16} prefix | hit rate "
+                  f"{prow['prefix_hit_rate']:.2f}, prefill tokens "
+                  f"{prow['paged_prefill_tokens']} vs ring "
+                  f"{prow['ring_prefill_tokens']} "
+                  f"({prow['prefill_saved_frac']*100:.0f}% saved), peak "
+                  f"cache {prow['peak_cache_bytes']/1e6:.2f} MB vs ring "
+                  f"{prow['ring_cache_bytes']/1e6:.2f} MB")
+            if prow["prefill_saved_frac"] < 0.5:
+                print(f"{backend:>16} prefix | FAIL: < 50% prefill tokens "
+                      "saved on the shared-prefix workload")
+                ok = False
     if out_json:
         os.makedirs(os.path.dirname(out_json) or ".", exist_ok=True)
         with open(out_json, "w") as f:
             json.dump(rows, f, indent=1)
+    if not ok:
+        raise SystemExit(1)
     return rows
 
 
@@ -116,11 +222,32 @@ if __name__ == "__main__":
     ap.add_argument("--quant-mode", default="int8_switchback")
     ap.add_argument("--backends", default="xla",
                     help="comma list of xla,pallas,pallas_interpret")
+    ap.add_argument("--cache-modes", default="ring,paged",
+                    help="comma list of ring,paged")
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--sys-prompt-len", type=int, default=48,
+                    help="shared system-prompt length for the prefix row")
+    ap.add_argument("--no-prefix", action="store_true",
+                    help="skip the prefix-heavy workload row")
     ap.add_argument("--repeats", type=int, default=3,
                     help="timed repeats per row (best kept; damps noise)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized: small grid, 1 repeat, still runs the "
+                         "prefix workload + its >=50%% savings check")
     ap.add_argument("--out", default=None)
     a = ap.parse_args()
-    run(out_json=a.out, arch=a.arch, max_batch=a.max_batch,
-        prompt_len=a.prompt_len, new_tokens=a.new_tokens,
-        quant_mode=a.quant_mode,
-        backends=tuple(a.backends.split(",")), repeats=a.repeats)
+    if a.smoke:
+        run(out_json=a.out, arch=a.arch, max_batch=4, prompt_len=8,
+            new_tokens=8, quant_mode=a.quant_mode,
+            backends=tuple(a.backends.split(",")), repeats=1,
+            cache_modes=tuple(a.cache_modes.split(",")),
+            block_size=8, sys_prompt_len=32, tail_len=4,
+            prefix_requests=6, prefix=not a.no_prefix)
+    else:
+        run(out_json=a.out, arch=a.arch, max_batch=a.max_batch,
+            prompt_len=a.prompt_len, new_tokens=a.new_tokens,
+            quant_mode=a.quant_mode,
+            backends=tuple(a.backends.split(",")), repeats=a.repeats,
+            cache_modes=tuple(a.cache_modes.split(",")),
+            block_size=a.block_size, sys_prompt_len=a.sys_prompt_len,
+            prefix=not a.no_prefix)

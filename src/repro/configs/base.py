@@ -200,6 +200,16 @@ class ServeConfig:
     kernel_backend: str = "xla"      # xla|pallas|pallas_interpret
     attn_block_q: int = 0            # flash-attention tile sizes for the
     attn_block_k: int = 0            # engine's ParallelConfig; 0 = auto
+    cache_mode: str = "ring"         # ring|paged — "paged" swaps the dense
+    # per-slot ring cache for the block-pool + block-table + radix
+    # prefix-cache subsystem (serve/paged, kernels/paged_attention,
+    # DESIGN.md §10); the ring path stays the parity oracle
+    block_size: int = 16             # paged: tokens per physical KV block
+    num_blocks: int = 0              # paged: pool size; 0 = auto (the ring
+    # capacity max_batch * ceil(max_len/block_size) — size DOWN for the
+    # memory win once the live-token ceiling is known)
+    prefix_cache: bool = True        # paged: park finished requests' full
+    # blocks in the radix cache so shared prompt prefixes skip prefill
     seed: int = 0
 
 

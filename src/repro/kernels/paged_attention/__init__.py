@@ -1,0 +1,9 @@
+"""Paged decode attention: block-pool KV cache + block-table kernel.
+
+Public entry point lives in :mod:`repro.kernels.paged_attention.ops`;
+the Pallas kernel body in ``paged_attention.py``; the gather-then-dense
+oracle in ``ref.py`` (DESIGN.md §10).
+"""
+from repro.kernels.paged_attention.ops import (  # noqa: F401
+    BACKENDS, paged_decode_attention)
+from repro.kernels.paged_attention.ref import gather_blocks  # noqa: F401

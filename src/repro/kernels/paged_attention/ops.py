@@ -1,0 +1,54 @@
+"""Jit'd public wrapper + backend dispatch for paged decode attention.
+
+Model-layout contract (what models/attention.py speaks): q (B, 1, H, hd);
+k_pool/v_pool (N+1, block_size, KV, hd) physical block pools; tables
+(B, n_blocks_per_slot) int32; kv_len (B,) valid cells per slot. On
+``xla`` the path is gather-then-dense (``ref.paged_decode_fwd``); on
+``pallas``/``pallas_interpret`` the fused kernel streams K/V blocks
+through the block-table scalar-prefetch index maps — same one-knob
+dispatch discipline as kernels/flash_attention/ops.py.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention import paged_attention as _k
+from repro.kernels.paged_attention import ref as _ref
+
+Backend = Literal["xla", "pallas", "pallas_interpret"]
+BACKENDS: tuple[str, ...] = ("xla", "pallas", "pallas_interpret")
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def paged_decode_attention(q, k_pool, v_pool, tables, kv_len, *,
+                           backend: Backend = "xla"):
+    """Single-query attention over the paged KV cache.
+
+    q (B, 1, H, hd); k_pool/v_pool (N+1, block_size, KV, hd) in the pool's
+    storage layout (block N is the engine's trash block); tables (B, nb)
+    int32 logical→physical block ids; kv_len (B,) int32 — valid cells per
+    slot. Returns (B, 1, H, hd). On the pallas backends, blocks past a
+    slot's live prefix are skipped dynamically (FLOPs *and* DMA).
+    """
+    B, one, H, hd = q.shape
+    assert one == 1, q.shape
+    KV = k_pool.shape[2]
+    assert H % KV == 0, (H, KV)
+    if backend not in BACKENDS:
+        raise ValueError(f"backend {backend!r} not in {BACKENDS}")
+    scale = 1.0 / math.sqrt(hd)
+    q3 = q[:, 0]                                         # (B, H, hd)
+    tables = tables.astype(jnp.int32)
+    kv_len = kv_len.astype(jnp.int32)
+    if backend == "xla":
+        return _ref.paged_decode_fwd(q3, k_pool, v_pool, tables, kv_len,
+                                     scale=scale)[:, None]
+    o = _k.paged_decode_fwd(q3, k_pool, v_pool, tables, kv_len,
+                            scale=scale,
+                            interpret=(backend == "pallas_interpret"))
+    return o[:, None]

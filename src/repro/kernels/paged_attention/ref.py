@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for paged decode attention.
+
+Gathers each slot's logical blocks into a dense (B, n_blocks·bs, KV, hd)
+cache through the block table, then runs the same masked single-query
+softmax as ``kernels/flash_attention/ref.decode_fwd`` — materialising
+exactly what the paged kernel streams block by block. This is both the
+``backend="xla"`` implementation behind ``ops.py`` and the parity oracle
+the interpret-mode tests compare the kernel against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import ref as _flash_ref
+
+
+def gather_blocks(pool: jax.Array, tables: jax.Array) -> jax.Array:
+    """(N+1, bs, KV, hd) pool + (B, nb) int32 table -> (B, nb·bs, KV, hd)
+    dense cache in logical order (cell j·bs+o of slot b is the pool cell
+    (tables[b, j], o)). Out-of-range ids clamp (jax gather semantics)."""
+    B, nb = tables.shape
+    g = pool[tables]                                 # (B, nb, bs, KV, hd)
+    return g.reshape(B, nb * pool.shape[1], pool.shape[2], pool.shape[3])
+
+
+def paged_decode_fwd(q, k_pool, v_pool, tables, kv_len, *, scale: float):
+    """q (B, H, hd); pools (N+1, bs, KV, hd); tables (B, nb) int32;
+    kv_len (B,) int32. Returns o (B, H, hd) q.dtype — the gather-then-
+    dense re-attend the paged kernel replaces."""
+    k = gather_blocks(k_pool, tables)
+    v = gather_blocks(v_pool, tables)
+    return _flash_ref.decode_fwd(q, k, v, kv_len.reshape(-1, 1),
+                                 scale=scale)

@@ -93,6 +93,18 @@ def main():
     ap.add_argument("--attn-block-k", type=int, default=0,
                     help="flash-attention KV tile rows, prefill + the "
                          "decode ring-cache kernel (0 = auto)")
+    ap.add_argument("--cache-mode", default="ring",
+                    choices=("ring", "paged"),
+                    help="paged = block-pool KV cache + radix prefix "
+                         "cache + block-table decode kernel (DESIGN §10)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged: tokens per physical KV block")
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="paged: pool size; 0 = auto (ring-equivalent "
+                         "capacity max_batch*ceil(max_len/block_size))")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="paged: disable parking finished requests' "
+                         "blocks for shared-prefix reuse")
     ap.add_argument("--mesh", default="auto",
                     choices=("auto", "test", "single", "multi"))
     ap.add_argument("--devices", type=int, default=None,
@@ -108,7 +120,12 @@ def main():
                        quant_mode=args.quant_mode,
                        kernel_backend=args.kernel_backend,
                        attn_block_q=args.attn_block_q,
-                       attn_block_k=args.attn_block_k, seed=args.seed)
+                       attn_block_k=args.attn_block_k,
+                       cache_mode=args.cache_mode,
+                       block_size=args.block_size,
+                       num_blocks=args.num_blocks,
+                       prefix_cache=not args.no_prefix_cache,
+                       seed=args.seed)
     try:
         engine = make_serve_engine(build(cfg), scfg, mesh)
     except NotImplementedError as e:
@@ -116,10 +133,12 @@ def main():
         # they still serve through the one-token decode_step loop
         return decode_step_fallback(cfg, args, reason=str(e))
     params = engine.init_params(args.seed)
+    cache_desc = (f"{engine.num_blocks}x{scfg.block_size} paged blocks"
+                  if scfg.cache_mode == "paged"
+                  else f"{scfg.max_batch}x{scfg.max_len} ring cache")
     print(f"[serve] {args.arch} mesh "
           f"{dict(zip(mesh.axis_names, mesh.devices.shape))} "
-          f"{args.quant_mode}/{args.kernel_backend} — "
-          f"{scfg.max_batch}x{scfg.max_len} ring cache")
+          f"{args.quant_mode}/{args.kernel_backend} — {cache_desc}")
 
     rng = np.random.default_rng(args.seed)
     lens = rng.integers(max(args.prompt_len // 2, 1),
@@ -139,7 +158,16 @@ def main():
           f"({stats['prefill_tokens']} prefilled) in "
           f"{stats['wall_s']:.2f}s — {stats['tokens_per_s']:.0f} tok/s, "
           f"{stats['decode_steps']} decode steps, "
-          f"{stats['prefill_calls']} prefill calls")
+          f"{stats['prefill_calls']} prefill calls; "
+          f"ttft p50 {stats['ttft_p50_s']*1e3:.1f}ms, "
+          f"itl p50 {stats['itl_p50_s']*1e3:.2f}ms")
+    if scfg.cache_mode == "paged":
+        print(f"[serve] paged: {stats['prefix_hits']}/"
+              f"{stats['prefix_lookups']} prefix hits, "
+              f"{stats['prefill_tokens_saved']} prefill tokens saved, "
+              f"peak {stats['peak_blocks_in_use']} blocks "
+              f"({stats['peak_cache_bytes']/1e6:.2f} MB vs "
+              f"{stats['ring_equiv_cache_bytes']/1e6:.2f} MB ring)")
     print("sample:", gens[0][:12])
 
 

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 
 from repro.core.precision import QuantPolicy, quant_linear
 from repro.kernels.flash_attention import ops as FA
+from repro.kernels.paged_attention import ops as PA
 from repro.models import params as PRM
 from repro.models.common import apply_rope, apply_rope_cached
 
@@ -327,6 +328,155 @@ def attention_prefill(x: Array, cache: KVCache, p: dict, cfg,
     v_cache = jnp.where(sel, cache.v.at[:, :S].set(v.astype(cache.v.dtype)),
                         cache.v)
     return out, KVCache(k_cache, v_cache, cache.length)
+
+
+# ---------------------------------------------------------------------------
+# paged serving (block-pool KV cache, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+class PagedKVCache(NamedTuple):
+    """Block-pool KV cache for paged serving.
+
+    ``k``/``v`` are pools of physical blocks shared by every batch slot,
+    shape (num_blocks + 1, block_size, n_kv, hd); the **last** block is
+    the trash block that absorbs writes from idle slots and masked pad
+    positions (racy writes there are by construction never read). Which
+    logical cell of which slot lives in which physical block is decided
+    host-side (serve/paged/block_pool.py) and rides into the jitted steps
+    as a (B, n_blocks_per_slot) int32 **block table**: cell ``j*bs + o``
+    of slot b is pool cell ``(tables[b, j], o)``. ``length`` is the
+    per-slot absolute token count — same semantics as the per-slot ring
+    cache, but cache memory scales with allocated blocks (live tokens),
+    not max_batch × max_len.
+    """
+    k: Array          # (num_blocks + 1, block_size, n_kv, hd)
+    v: Array
+    length: Array     # (B,) int32 absolute tokens per slot
+
+
+def _paged_commit(buf: Array, vals: Array, phys: Array, off: Array) -> Array:
+    """Scatter token KVs into pool cells. buf (N+1, bs, KV, hd); vals
+    (T, KV, hd); phys/off (T,) int32. Masked writes are routed to the
+    trash block by the caller; duplicate targets only ever occur there."""
+    return buf.at[phys, off].set(vals.astype(buf.dtype))
+
+
+def attention_paged_prefill(x: Array, cache: PagedKVCache, tables: Array,
+                            p: dict, cfg, policy: QuantPolicy, *,
+                            admit: Array, pref_lens: Array,
+                            prompt_lens: Array, rope_cache=None
+                            ) -> tuple[Array, PagedKVCache]:
+    """Chunked prefill over a block table: run the prompt *suffix* whose
+    KV the prefix cache didn't already hold, attending to the adopted
+    prefix blocks plus the suffix's own causal keys.
+
+    x: (B, S, D) suffix tokens (positions ``pref_lens[b] + [0, S)`` of
+    each prompt) right-padded to a common S; ``pref_lens``: (B,) adopted
+    prefix lengths (multiples of block_size — only full blocks are
+    shared); ``prompt_lens``: (B,) full prompt lengths; ``admit``: (B,)
+    bool. The suffix K/V are committed into the slot's table blocks at
+    block granularity (non-admitted and pad positions land in the trash
+    block), so live neighbours' blocks are untouched.
+
+    With ``pref_lens == 0`` the math reduces exactly to the ring path's
+    dense prefill — adopted-prefix columns are masked to NEG_INF and
+    contribute exact zeros — which is what the paged-vs-ring parity tests
+    pin. Adopted prefix K/V are read back in cache dtype (they were
+    computed by the request that first filled them); suffix keys attend
+    in compute dtype like the ring path. The attention here is the dense
+    oracle on every backend: chunked-prefill flash tiles are future work
+    (ROADMAP), and prefill waves are rare next to decode steps.
+    """
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    bs, nb = cache.k.shape[1], tables.shape[1]
+    trash = cache.k.shape[0] - 1
+    positions = pref_lens[:, None] + jnp.arange(S)[None, :]   # (B, S) abs
+    q, k, v = qkv_project(x, p, cfg, policy)
+    if rope_cache is not None:
+        q = apply_rope_cached(q, *rope_cache)
+        k = apply_rope_cached(k, *rope_cache)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = PRM.constrain(q, ("batch", None, "heads", None))
+    k = PRM.constrain(k, ("batch", None, "kv_heads", None))
+
+    # adopted prefix, gathered through the block table in logical order
+    k_pref = cache.k[tables].reshape(B, nb * bs, KV, hd)
+    v_pref = cache.v[tables].reshape(B, nb * bs, KV, hd)
+    kx = jnp.concatenate([_expand_kv(k_pref, H), _expand_kv(k, H)], axis=1)
+    vx = jnp.concatenate([_expand_kv(v_pref, H), _expand_kv(v, H)], axis=1)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,
+                   kx.astype(jnp.float32))
+    # prefix columns: live iff < the slot's adopted prefix; suffix
+    # columns: plain causal (query i and key j share the pref offset)
+    dead_pref = (jnp.arange(nb * bs)[None, :]
+                 >= pref_lens[:, None])                       # (B, nb*bs)
+    dead_suf = jnp.arange(S)[None, :] > jnp.arange(S)[:, None]  # (S, S)
+    dead = jnp.concatenate(
+        [jnp.broadcast_to(dead_pref[:, None, None, :], (B, 1, S, nb * bs)),
+         jnp.broadcast_to(dead_suf[None, None], (B, 1, S, S))], axis=-1)
+    s = jnp.where(dead, NEG_INF, s)
+    a = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", a,
+                   vx.astype(jnp.float32)).astype(q.dtype)
+    o = o.reshape(B, S, H * hd)
+    wo = PRM.use_weight(p["wo"], ("heads", "embed"), policy.compute_dtype)
+    out = quant_linear(o, wo, policy=policy)
+
+    # commit the suffix KV at block granularity; masked positions -> trash
+    valid = admit[:, None] & (positions < prompt_lens[:, None])
+    logical = jnp.clip(positions // bs, 0, nb - 1)
+    phys = jnp.where(valid, jnp.take_along_axis(tables, logical, axis=1),
+                     trash).reshape(-1)
+    off = jnp.where(valid, positions % bs, 0).reshape(-1)
+    k_buf = _paged_commit(cache.k, k.reshape(B * S, KV, hd), phys, off)
+    v_buf = _paged_commit(cache.v, v.reshape(B * S, KV, hd), phys, off)
+    return out, PagedKVCache(k_buf, v_buf, cache.length)
+
+
+def attention_paged_decode_step(x: Array, cache: PagedKVCache,
+                                tables: Array, p: dict, cfg,
+                                policy: QuantPolicy, *, rope_cache=None,
+                                impl: str = "flash_scan"
+                                ) -> tuple[Array, PagedKVCache]:
+    """One-token decode through the block table: the slot's new KV lands
+    in pool cell ``(tables[b, length[b]//bs], length[b]%bs)`` (the engine
+    guarantees that block exists for live slots; idle slots' table rows
+    point at the trash block) and the re-attend runs the paged decode
+    kernel on the Pallas backends — per-slot lengths and the block table
+    ride in as scalar-prefetch operands, dead blocks are skipped on both
+    the FLOP and DMA side — or gather-then-dense on ``xla`` /
+    ``impl="dense"``. Lengths advance by one for every slot, exactly like
+    the ring path (idle slots decode garbage into the trash block).
+    """
+    B = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    bs, nb = cache.k.shape[1], tables.shape[1]
+    pos = cache.length[:, None]                              # (B, 1) abs
+    q, k, v = qkv_project(x, p, cfg, policy)
+    if rope_cache is not None:
+        q = apply_rope_cached(q, *rope_cache)
+        k = apply_rope_cached(k, *rope_cache)
+    else:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    logical = jnp.clip(cache.length // bs, 0, nb - 1)
+    phys = jnp.take_along_axis(tables, logical[:, None], axis=1)[:, 0]
+    off = cache.length % bs
+    k_buf = _paged_commit(cache.k, k[:, 0], phys, off)
+    v_buf = _paged_commit(cache.v, v[:, 0], phys, off)
+    valid = jnp.minimum(cache.length + 1, nb * bs)           # (B,)
+    backend = (policy.backend if impl != "dense"
+               and policy.backend in FLASH_BACKENDS else "xla")
+    o = PA.paged_decode_attention(q, k_buf, v_buf, tables, valid,
+                                  backend=backend)
+    o = o.reshape(B, 1, H * hd)
+    wo = PRM.use_weight(p["wo"], ("heads", "embed"), policy.compute_dtype)
+    out = quant_linear(o, wo, policy=policy)
+    return out, PagedKVCache(k_buf, v_buf, cache.length + 1)
 
 
 def cross_attention(x: Array, enc_kv: tuple[Array, Array], p: dict, cfg,

@@ -210,7 +210,7 @@ def param_specs(cfg: ModelConfig) -> Dict[str, Any]:
 def _layer_apply(x: Array, lp: Dict, cfg: ModelConfig, policy: QuantPolicy,
                  parallel: ParallelConfig, layer_idx: int, *,
                  positions: Array, state=None, prefill=None,
-                 rope_cache=None):
+                 rope_cache=None, paged=None):
     """One transformer layer. Returns (x, new_state, aux_loss).
 
     ``prefill=(admit, prompt_lens)`` is the serving admission mode: the
@@ -220,7 +220,13 @@ def _layer_apply(x: Array, lp: Dict, cfg: ModelConfig, policy: QuantPolicy,
     sequence mixer is the shared layer body, so serve prefill can't drift
     from the training forward. ``rope_cache=(cos, sin)`` — pre-gathered
     RoPE table rows for this call's positions, hoisted once per step by
-    the serve engine instead of recomputed per layer."""
+    the serve engine instead of recomputed per layer.
+
+    ``paged=(tables, pref_lens)`` switches the serving modes onto the
+    block-pool cache (``state`` is then a PagedKVCache): prefill runs the
+    chunked ``attention_paged_prefill`` (suffix only, adopted prefix read
+    through the table) and decode appends through the table/trash-block
+    discipline. ``pref_lens`` is only read in prefill mode."""
     kind = cfg.layer_kind(layer_idx)
     aux = jnp.zeros((), jnp.float32)
     g1 = lp.get("gamma1")
@@ -232,11 +238,17 @@ def _layer_apply(x: Array, lp: Dict, cfg: ModelConfig, policy: QuantPolicy,
     if kind == "attn":
         if prefill is not None:
             admit, prompt_lens = prefill
-            a, new_state = ATT.attention_prefill(h, state, lp["attn"],
-                                                 cfg, policy, admit=admit,
-                                                 rope_cache=rope_cache,
-                                                 impl=parallel.attn_impl,
-                                                 block_q=bq, block_k=bk)
+            if paged is not None:
+                tables, pref_lens = paged
+                a, new_state = ATT.attention_paged_prefill(
+                    h, state, tables, lp["attn"], cfg, policy, admit=admit,
+                    pref_lens=pref_lens, prompt_lens=prompt_lens,
+                    rope_cache=rope_cache)
+            else:
+                a, new_state = ATT.attention_prefill(
+                    h, state, lp["attn"], cfg, policy, admit=admit,
+                    rope_cache=rope_cache, impl=parallel.attn_impl,
+                    block_q=bq, block_k=bk)
             new_state = new_state._replace(
                 length=jnp.where(admit, prompt_lens, new_state.length))
         elif state is None:
@@ -244,6 +256,10 @@ def _layer_apply(x: Array, lp: Dict, cfg: ModelConfig, policy: QuantPolicy,
                                     positions=positions,
                                     impl=parallel.attn_impl,
                                     block_q=bq, block_k=bk)
+        elif paged is not None:
+            a, new_state = ATT.attention_paged_decode_step(
+                h, state, paged[0], lp["attn"], cfg, policy,
+                rope_cache=rope_cache, impl=parallel.attn_impl)
         else:
             a, new_state = ATT.attention_decode_step(h, state, lp["attn"],
                                                      cfg, policy,
@@ -278,7 +294,7 @@ def _layer_apply(x: Array, lp: Dict, cfg: ModelConfig, policy: QuantPolicy,
 def group_apply(x: Array, gp: Dict[str, Dict], cfg: ModelConfig,
                 policy: QuantPolicy, parallel: ParallelConfig, *,
                 positions: Array, states: Optional[Dict] = None,
-                rope_cache=None):
+                rope_cache=None, paged=None):
     """Apply one period-group (P heterogeneous layers unrolled).
     gp: {"pos{i}": layer params (unstacked)}. Returns (x, new_states, aux)."""
     P = period(cfg)
@@ -288,7 +304,7 @@ def group_apply(x: Array, gp: Dict[str, Dict], cfg: ModelConfig,
         st = states.get(f"pos{i}") if states is not None else None
         x, ns, aux = _layer_apply(x, gp[f"pos{i}"], cfg, policy, parallel, i,
                                   positions=positions, state=st,
-                                  rope_cache=rope_cache)
+                                  rope_cache=rope_cache, paged=paged)
         aux_total = aux_total + aux
         if states is not None:
             new_states[f"pos{i}"] = ns
@@ -513,6 +529,127 @@ def serve_state_logical_axes(cfg: ModelConfig):
     ax = ("layers", "batch", "cache_seq", "kv_heads", None)
     return {f"pos{i}": ATT.KVCache(ax, ax, ("layers", "batch"))
             for i in range(P)}
+
+
+def init_paged_serve_state(cfg: ModelConfig, num_blocks: int,
+                           block_size: int, max_batch: int,
+                           dtype=jnp.bfloat16):
+    """Block-pool KV caches, stacked over groups (DESIGN.md §10).
+
+    Layout per position-in-period: ``PagedKVCache`` with k/v pools of
+    shape (G, num_blocks + 1, block_size, n_kv_heads, hd) — one extra
+    *trash* block at index ``num_blocks`` absorbs masked writes — and
+    per-slot absolute lengths (G, max_batch). Unlike
+    :func:`init_serve_state` the cache footprint scales with
+    ``num_blocks`` (live tokens), not ``max_batch × max_len``; which slot
+    owns which block is the host-side block table
+    (serve/paged/block_pool.py), passed to every jitted step.
+    """
+    _require_all_attention(cfg, "init_paged_serve_state")
+    P = period(cfg)
+    G = n_groups(cfg)
+    shape = (G, num_blocks + 1, block_size, cfg.n_kv_heads, cfg.hd)
+    return {f"pos{i}": ATT.PagedKVCache(jnp.zeros(shape, dtype),
+                                        jnp.zeros(shape, dtype),
+                                        jnp.zeros((G, max_batch), jnp.int32))
+            for i in range(P)}
+
+
+def paged_state_logical_axes(cfg: ModelConfig):
+    """Logical axes for the paged serve state. Blocks are shared across
+    batch slots, so the pool cannot shard over ``data`` the way the ring
+    cache's batch dim does — it replicates there and shards kv_heads over
+    ``model``; lengths shard over batch with the slots they describe."""
+    P = period(cfg)
+    ax = ("layers", None, None, "kv_heads", None)
+    return {f"pos{i}": ATT.PagedKVCache(ax, ax, ("layers", "batch"))
+            for i in range(P)}
+
+
+def paged_prefill(params, states, tables: Array, tokens: Array,
+                  pref_lens: Array, prompt_lens: Array, admit: Array,
+                  cfg: ModelConfig, policy: QuantPolicy,
+                  parallel: ParallelConfig, *, last_only: bool = False,
+                  rope_cache=None):
+    """Seed admitted slots' block-table caches from their prompt
+    *suffixes* (the part the prefix cache didn't already hold).
+
+    tokens: (B, S) suffix tokens right-padded to a common S;
+    pref_lens: (B,) adopted prefix lengths (block multiples, 0 = no
+    sharing); prompt_lens: (B,) full prompt lengths; admit: (B,) bool;
+    tables: (B, n_blocks_per_slot) int32. Returns (logits, new states) —
+    logits (B, S, V), or (B, 1, V) with ``last_only`` (each slot's last
+    valid prompt position, the only row sampling needs). With
+    ``pref_lens == 0`` this is math-for-math the ring ``serve_prefill``
+    dense path, which the paged-vs-ring parity tests pin.
+    """
+    _require_all_attention(cfg, "paged_prefill")
+    x = embed_input(params, tokens, cfg, policy)
+    positions = jnp.arange(tokens.shape[1])
+    paged = (tables, pref_lens)
+
+    def body(xx, inp):
+        gp, st = inp
+        new_st = {}
+        for i in range(period(cfg)):
+            xx, new_st[f"pos{i}"], _ = _layer_apply(
+                xx, gp[f"pos{i}"], cfg, policy, parallel, i,
+                positions=positions, state=st[f"pos{i}"],
+                prefill=(admit, prompt_lens), rope_cache=rope_cache,
+                paged=paged)
+        return xx, new_st
+
+    if parallel.scan_layers and n_groups(cfg) > 1:
+        x, new_states = jax.lax.scan(body, x, (params["blocks"], states))
+    else:
+        outs = []
+        for g in range(n_groups(cfg)):
+            gp = jax.tree.map(lambda p: p[g], params["blocks"])
+            st = jax.tree.map(lambda s: s[g], states)
+            x, ns = body(x, (gp, st))
+            outs.append(ns)
+        new_states = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    if last_only:
+        idx = jnp.clip(prompt_lens - pref_lens - 1, 0, x.shape[1] - 1)
+        x = x[jnp.arange(x.shape[0]), idx][:, None]
+    logits = lm_head(params, x, cfg, policy)
+    return logits, new_states
+
+
+def paged_decode_step(params, states, tables: Array, tokens: Array,
+                      cfg: ModelConfig, policy: QuantPolicy,
+                      parallel: ParallelConfig, *, rope_cache=None):
+    """One-token decode over the block-pool cache. tokens: (B, 1);
+    tables: (B, n_blocks_per_slot) int32. Returns (logits (B, 1, V),
+    states). Same lockstep-length discipline as :func:`decode_step`;
+    the per-slot write lands in the table's block for ``length[b]``
+    (the engine guarantees it exists for live slots)."""
+    _require_all_attention(cfg, "paged_decode_step")
+    x = embed_input(params, tokens, cfg, policy)
+    positions = jnp.arange(1)   # RoPE position comes from cache length inside
+    body = functools.partial(group_apply, cfg=cfg, policy=policy,
+                             parallel=parallel, positions=positions,
+                             rope_cache=rope_cache, paged=(tables, None))
+
+    def scan_body(x, inp):
+        gp, st = inp
+        x2, ns, _ = body(x, gp, states=st)
+        return x2, ns
+
+    if parallel.scan_layers and n_groups(cfg) > 1:
+        x, new_states = jax.lax.scan(scan_body, x,
+                                     (params["blocks"], states))
+    else:
+        G = n_groups(cfg)
+        outs = []
+        for g in range(G):
+            gp = jax.tree.map(lambda p: p[g], params["blocks"])
+            st = jax.tree.map(lambda s: s[g], states)
+            x, ns = scan_body(x, (gp, st))
+            outs.append(ns)
+        new_states = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    logits = lm_head(params, x, cfg, policy)
+    return logits, new_states
 
 
 def serve_prefill(params, states, tokens: Array, prompt_lens: Array,

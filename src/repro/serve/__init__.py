@@ -1,5 +1,8 @@
 """Continuously-batched, sharded inference (the serving twin of
-``repro.train``): ServeEngine + SlotScheduler. See DESIGN.md §8."""
+``repro.train``): ServeEngine + SlotScheduler, plus the PagedServe
+block-pool subsystem (``cache_mode="paged"``). See DESIGN.md §8/§10."""
 from repro.serve.engine import (ServeEngine, make_serve_engine,  # noqa: F401
                                 prefill_bucket)
+from repro.serve.paged import (BlockPool, NoFreeBlocks,  # noqa: F401
+                               PagedCacheManager, RadixPrefixCache)
 from repro.serve.scheduler import Request, SlotScheduler  # noqa: F401

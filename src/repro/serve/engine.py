@@ -25,6 +25,17 @@ the attention re-attend through the fused ``kernels/flash_attention``
 decode kernel (per-slot lengths, dynamic tile skip over the ring cache)
 and prefill through the flash forward; RoPE cos/sin tables are hoisted to
 engine constants so neither path recomputes them per layer (DESIGN.md §9).
+
+``ServeConfig.cache_mode="paged"`` swaps the dense ring cache for the
+**PagedServe** block-pool subsystem (DESIGN.md §10): KV lives in a fixed
+pool of ``num_blocks`` blocks of ``block_size`` tokens, each slot carries
+a host-managed block table (``serve/paged/block_pool.py``), identical
+prompt prefixes adopt already-filled blocks through a radix prefix cache
+(zero prefill FLOPs for the shared prefix), and the decode re-attend runs
+the ``kernels/paged_attention`` block-table kernel on the Pallas
+backends. Cache memory then scales with live tokens instead of
+``max_batch × max_len``, and the ring path stays available as the oracle
+the paged path must match token-for-token.
 """
 from __future__ import annotations
 
@@ -105,6 +116,11 @@ class ServeEngine:
     jit_decode: Callable
     jit_sample: Callable
     donate: bool
+    # paged mode (cache_mode="paged"); 0/unused under the ring cache
+    num_blocks: int = 0              # physical KV blocks (excl. trash)
+    blocks_per_slot: int = 0         # block-table width = cdiv(max_len, bs)
+    block_bytes: int = 0             # bytes one block costs across layers
+    ring_equiv_cache_bytes: int = 0  # what the dense ring cache would cost
 
     # -- assembly helpers ---------------------------------------------------
     def shard_ctx(self) -> PRM.ShardCtx:
@@ -161,6 +177,31 @@ class ServeEngine:
             return self.jit_decode(params, cache,
                                    jnp.asarray(tokens, jnp.int32))
 
+    def prefill_paged(self, params, cache, tables, tokens, pref_lens,
+                      prompt_lens, admit):
+        """Paged prefill: seed admitted slots' block tables from prompt
+        *suffixes*. tokens: (max_batch, S) right-padded suffix tokens;
+        pref_lens: (max_batch,) adopted prefix lengths (block multiples);
+        prompt_lens: full prompt lengths; tables: (max_batch,
+        blocks_per_slot) int32. Returns ``(logits (B, 1, V), new_cache)``
+        — each slot's last valid prompt position."""
+        with set_mesh(self.mesh), self.shard_ctx():
+            return self.jit_prefill(params, cache,
+                                    jnp.asarray(tables, jnp.int32),
+                                    jnp.asarray(tokens, jnp.int32),
+                                    jnp.asarray(pref_lens, jnp.int32),
+                                    jnp.asarray(prompt_lens, jnp.int32),
+                                    jnp.asarray(admit, bool))
+
+    def decode_paged(self, params, cache, tables, tokens):
+        """One paged decode step: tokens (max_batch, 1) int32 appended
+        through the block table. Same donation/lockstep-length semantics
+        as :meth:`decode`."""
+        with set_mesh(self.mesh), self.shard_ctx():
+            return self.jit_decode(params, cache,
+                                   jnp.asarray(tables, jnp.int32),
+                                   jnp.asarray(tokens, jnp.int32))
+
     def sample(self, logits, key):
         """Sample next tokens (B,) from last-position logits (B, V) with
         the engine's configured temperature (0 = greedy argmax)."""
@@ -178,72 +219,176 @@ class ServeEngine:
         per admission wave), decode one token for the whole batch, record
         and evict finished sequences. Returns ``(generations, stats)``
         where ``generations[i]`` is the token list for ``prompts[i]`` and
-        stats carries tokens/s and step counters (the JSON row source for
-        ``benchmarks/bench_serve.py``).
+        stats carries tokens/s, per-request TTFT and inter-token latency
+        percentiles, and the scheduler's admission/eviction counters (the
+        JSON row source for ``benchmarks/bench_serve.py``).
+
+        Under ``cache_mode="paged"`` the loop additionally drives a
+        :class:`~repro.serve.paged.PagedCacheManager`: admission runs the
+        radix prefix-cache lookup and allocates block tables (prefilling
+        only the non-shared suffix), the scheduler's ``fits`` hook lets a
+        small request be admitted past a pending one whose block budget
+        can't currently be met, decode grows tables one block at a time,
+        and completion parks full blocks in the prefix cache for reuse.
+        Paged stats report prefix hit rates, prefill tokens saved, and
+        peak block/byte usage next to the ring-equivalent footprint.
         """
+        scfg = self.serve_cfg
+        B = scfg.max_batch
+        paged = scfg.cache_mode == "paged"
         if max_new_tokens < 1:       # prefill always samples one token
-            return [[] for _ in prompts], {
+            stats = {
                 "new_tokens": 0, "prefill_tokens": 0, "decode_steps": 0,
                 "prefill_calls": 0, "wall_s": 0.0, "prefill_s": 0.0,
                 "decode_s": 0.0, "tokens_per_s": 0.0,
-                "decode_tokens_per_s": 0.0}
-        scfg = self.serve_cfg
-        B = scfg.max_batch
+                "decode_tokens_per_s": 0.0,
+                "ttft_p50_s": 0.0, "ttft_p95_s": 0.0,
+                "itl_p50_s": 0.0, "itl_p95_s": 0.0}
+            stats.update({f"sched_{k}": 0 for k in
+                          SlotScheduler(B, scfg.max_len).counters})
+            if paged:
+                stats.update({
+                    "prefix_lookups": 0, "prefix_hits": 0,
+                    "prefix_hit_rate": 0.0, "prefill_tokens_saved": 0,
+                    "peak_blocks_in_use": 0, "num_blocks": self.num_blocks,
+                    "peak_live_blocks": 0, "block_bytes": self.block_bytes,
+                    "peak_cache_bytes": 0,
+                    "ring_equiv_cache_bytes": self.ring_equiv_cache_bytes})
+            return [[] for _ in prompts], stats
         sched = SlotScheduler(B, scfg.max_len, rollover=scfg.rollover)
         uids = [sched.submit(p, max_new_tokens=max_new_tokens,
                              eos_id=eos_id) for p in prompts]
+        mgr = fits = None
+        if paged:
+            from repro.serve.paged import PagedCacheManager
+            mgr = PagedCacheManager(self.num_blocks, scfg.block_size, B,
+                                    self.blocks_per_slot,
+                                    prefix_cache=scfg.prefix_cache)
+            fits = lambda r: mgr.fits(len(r.prompt), r.max_new_tokens,  # noqa: E731
+                                      prompt=r.prompt)
         cache = self.init_cache()
         cur = np.zeros((B,), np.int32)        # next input token per slot
         key = jax.random.PRNGKey(scfg.seed if seed is None else seed)
         n_new = n_prefill_tok = n_steps = n_prefills = 0
         n_decoded = 0                         # tokens produced by decode steps
         prefill_s = decode_s = 0.0
+        ttft: Dict[int, float] = {}           # uid -> first-token latency
+        itl: List[float] = []                 # inter-token deltas, all slots
+        last_t: Dict[int, float] = {}         # slot -> last token timestamp
+        peak_live_blocks = 0
+
+        def _finish(slot, r, now):
+            last_t.pop(slot, None)
+            if paged:
+                # KVs written: the prompt plus every generated token but
+                # the last (never consumed); full blocks park for reuse
+                mgr.release(slot, r.prompt + r.generated[:-1])
+
         t0 = time.perf_counter()
         while sched.has_work:
-            admits = sched.admit()
+            if paged:
+                mgr.begin_wave()
+            admits = sched.admit(fits=fits)
             if admits:
                 t_pf = time.perf_counter()
+                toks_l = np.ones((B,), np.int32)   # dummy 1 for idle slots
+                pref_l = np.zeros((B,), np.int32)
+                mask = np.zeros((B,), bool)
+                if paged:
+                    pref = {s: mgr.admit(s, r.prompt, r.max_new_tokens)
+                            for s, r in admits}
+                    # sample here too: a max_new_tokens=1 run finishes at
+                    # prefill and never reaches the decode-branch sample
+                    peak_live_blocks = max(peak_live_blocks,
+                                           mgr.live_blocks)
+                    longest = max(len(r.prompt) - pref[s] for s, r in admits)
+                else:
+                    pref = {s: 0 for s, _ in admits}
+                    longest = max(len(r.prompt) for _, r in admits)
                 # clamp: the bucket may round past a non-pow2 max_len, but
                 # the scheduler guarantees every prompt fits the cache
-                S = min(prefill_bucket(max(len(r.prompt) for _, r in admits),
-                                       scfg.prefill_bucket), scfg.max_len)
+                S = min(prefill_bucket(longest, scfg.prefill_bucket),
+                        scfg.max_len)
                 toks = np.zeros((B, S), np.int32)
-                lens = np.ones((B,), np.int32)     # dummy 1 for idle slots
-                mask = np.zeros((B,), bool)
                 for slot, r in admits:
-                    toks[slot, :len(r.prompt)] = r.prompt
-                    lens[slot] = len(r.prompt)
+                    suffix = r.prompt[pref[slot]:]
+                    toks[slot, :len(suffix)] = suffix
+                    toks_l[slot] = len(r.prompt)
+                    pref_l[slot] = pref[slot]
                     mask[slot] = True
                 key, k1 = jax.random.split(key)
-                logits, cache = self.prefill(params, cache, toks, lens, mask)
+                if paged:
+                    logits, cache = self.prefill_paged(
+                        params, cache, mgr.tables, toks, pref_l, toks_l,
+                        mask)
+                else:
+                    logits, cache = self.prefill(params, cache, toks,
+                                                 toks_l, mask)
                 tok = np.asarray(self.sample(logits[:, 0], k1))
-                for slot, _ in admits:
-                    sched.record(slot, tok[slot])
+                now = time.perf_counter()
+                for slot, r in admits:
+                    done = sched.record(slot, tok[slot])
                     cur[slot] = tok[slot]
-                n_prefill_tok += int(sum(len(r.prompt) for _, r in admits))
+                    ttft[r.uid] = now - t0
+                    last_t[slot] = now
+                    if done:
+                        _finish(slot, r, now)
+                n_prefill_tok += int(sum(len(r.prompt) - pref[s]
+                                         for s, r in admits))
                 n_new += len(admits)
                 n_prefills += 1
-                prefill_s += time.perf_counter() - t_pf
+                prefill_s += now - t_pf
             running = sched.running
             if not running:
                 continue
+            if paged:
+                for slot, r in running:
+                    # the KV write for this step lands at absolute
+                    # position total_len - 1 (the token being consumed)
+                    mgr.ensure_block(slot, r.total_len - 1)
+                peak_live_blocks = max(peak_live_blocks, mgr.live_blocks)
             t_dec = time.perf_counter()
             key, k1 = jax.random.split(key)
-            logits, cache = self.decode(params, cache, cur[:, None])
+            if paged:
+                logits, cache = self.decode_paged(params, cache,
+                                                  mgr.tables, cur[:, None])
+            else:
+                logits, cache = self.decode(params, cache, cur[:, None])
             tok = np.asarray(self.sample(logits[:, 0], k1))
-            for slot, _ in running:
-                sched.record(slot, tok[slot])
+            now = time.perf_counter()
+            for slot, r in running:
+                done = sched.record(slot, tok[slot])
                 cur[slot] = tok[slot]
+                itl.append(now - last_t[slot])
+                last_t[slot] = now
+                if done:
+                    _finish(slot, r, now)
             n_new += len(running)
             n_decoded += len(running)
             n_steps += 1
-            decode_s += time.perf_counter() - t_dec
+            decode_s += now - t_dec
         dt = time.perf_counter() - t0
+
+        def pct(xs, p):
+            return float(np.percentile(np.asarray(xs), p)) if xs else 0.0
+
+        ttfts = [ttft[u] for u in uids if u in ttft]
         stats = {"new_tokens": n_new, "prefill_tokens": n_prefill_tok,
                  "decode_steps": n_steps, "prefill_calls": n_prefills,
                  "wall_s": dt, "prefill_s": prefill_s, "decode_s": decode_s,
                  "tokens_per_s": n_new / max(dt, 1e-9),
-                 "decode_tokens_per_s": n_decoded / max(decode_s, 1e-9)}
+                 "decode_tokens_per_s": n_decoded / max(decode_s, 1e-9),
+                 # per-request latency: TTFT includes queueing time (the
+                 # admission-latency signal paged-vs-ring is judged on)
+                 "ttft_p50_s": pct(ttfts, 50), "ttft_p95_s": pct(ttfts, 95),
+                 "itl_p50_s": pct(itl, 50), "itl_p95_s": pct(itl, 95)}
+        stats.update({f"sched_{k}": v for k, v in sched.counters.items()})
+        if paged:
+            stats.update(mgr.stats())
+            stats["peak_live_blocks"] = peak_live_blocks
+            stats["block_bytes"] = self.block_bytes
+            stats["peak_cache_bytes"] = mgr.peak_in_use * self.block_bytes
+            stats["ring_equiv_cache_bytes"] = self.ring_equiv_cache_bytes
         return [sched.results[u] for u in uids], stats
 
 
@@ -286,12 +431,35 @@ def make_serve_engine(model, serve_cfg: ServeConfig, mesh: Mesh, *,
     specs = bundle.param_specs
     param_shard = specs_to_shardings(specs, mesh, rules)
 
+    paged = serve_cfg.cache_mode == "paged"
+    if serve_cfg.cache_mode not in ("ring", "paged"):
+        raise ValueError(f"cache_mode {serve_cfg.cache_mode!r} not in "
+                         "('ring', 'paged')")
     dtype = jnp.dtype(serve_cfg.cache_dtype)
-    cache_abs = jax.eval_shape(
-        lambda: TF.init_serve_state(cfg, serve_cfg.max_batch,
-                                    serve_cfg.max_len, dtype))
-    cache_shard = _axes_to_shardings(
-        cache_abs, TF.serve_state_logical_axes(cfg), mesh, rules)
+    bs = serve_cfg.block_size
+    blocks_per_slot = -(-serve_cfg.max_len // bs) if paged else 0
+    # auto num_blocks = the ring cache's capacity in blocks, so the
+    # default paged engine can always admit what the ring engine can;
+    # size it DOWN for the memory win once the workload's live-token
+    # ceiling is known (admission throttles via the scheduler fits hook)
+    num_blocks = (serve_cfg.num_blocks
+                  or serve_cfg.max_batch * blocks_per_slot) if paged else 0
+    if paged:
+        if serve_cfg.rollover:
+            raise NotImplementedError(
+                "cache_mode='paged' has no rollover: the block table is "
+                "append-only; use the ring cache for sliding-window decode")
+        cache_abs = jax.eval_shape(
+            lambda: TF.init_paged_serve_state(cfg, num_blocks, bs,
+                                              serve_cfg.max_batch, dtype))
+        cache_shard = _axes_to_shardings(
+            cache_abs, TF.paged_state_logical_axes(cfg), mesh, rules)
+    else:
+        cache_abs = jax.eval_shape(
+            lambda: TF.init_serve_state(cfg, serve_cfg.max_batch,
+                                        serve_cfg.max_len, dtype))
+        cache_shard = _axes_to_shardings(
+            cache_abs, TF.serve_state_logical_axes(cfg), mesh, rules)
     repl = NamedSharding(mesh, P())
 
     # RoPE tables hoisted to engine constants: cos/sin rows for positions
@@ -326,24 +494,63 @@ def make_serve_engine(model, serve_cfg: ServeConfig, mesh: Mesh, *,
         return TF.decode_step(p, st, toks, cfg, policy, parallel,
                               rope_cache=rc)
 
+    def paged_prefill_fn(p, st, tables, toks, pref_lens, lens, admit):
+        if rope_cos is None:
+            rc = None
+        else:
+            # suffix tokens sit at absolute positions pref + [0, S); the
+            # per-slot gather clamps for pad rows (garbage, masked later)
+            pos = pref_lens[:, None] + jnp.arange(toks.shape[1])[None, :]
+            rc = (rope_cos[pos], rope_sin[pos])
+        return TF.paged_prefill(p, st, tables, toks, pref_lens, lens,
+                                admit, cfg, policy, parallel,
+                                last_only=True, rope_cache=rc)
+
+    def paged_decode_fn(p, st, tables, toks):
+        if rope_cos is None:
+            rc = None
+        else:
+            pos = next(iter(st.values())).length[0]
+            rc = (rope_cos[pos][:, None], rope_sin[pos][:, None])
+        return TF.paged_decode_step(p, st, tables, toks, cfg, policy,
+                                    parallel, rope_cache=rc)
+
+    # per-mode picks: (prefill fn + its replicated-operand count, decode
+    # fn + count, fresh-cache initializer); the jit wiring below is shared
+    if paged:
+        pf, n_pf, dc, n_dc = paged_prefill_fn, 5, paged_decode_fn, 2
+        init_fn = lambda: TF.init_paged_serve_state(  # noqa: E731
+            cfg, num_blocks, bs, serve_cfg.max_batch, dtype)
+    else:
+        pf, n_pf, dc, n_dc = prefill_fn, 3, decode_fn, 1
+        init_fn = lambda: TF.init_serve_state(  # noqa: E731
+            cfg, serve_cfg.max_batch, serve_cfg.max_len, dtype)
+
     # out_shardings pin the returned cache to the canonical layout — without
     # this GSPMD may pick a different (e.g. hd-over-model) layout for the
     # prefill output and the decode step's in_shardings would reject it.
     dn = (1,) if donate else ()
-    jit_prefill = jax.jit(prefill_fn,
-                          in_shardings=(param_shard, cache_shard, repl,
-                                        repl, repl),
+    jit_prefill = jax.jit(pf,
+                          in_shardings=(param_shard, cache_shard)
+                          + (repl,) * n_pf,
                           out_shardings=(None, cache_shard),
                           donate_argnums=dn)
-    jit_decode = jax.jit(decode_fn,
-                         in_shardings=(param_shard, cache_shard, repl),
+    jit_decode = jax.jit(dc,
+                         in_shardings=(param_shard, cache_shard)
+                         + (repl,) * n_dc,
                          out_shardings=(None, cache_shard),
                          donate_argnums=dn)
-    jit_init_cache = jax.jit(
-        lambda: TF.init_serve_state(cfg, serve_cfg.max_batch,
-                                    serve_cfg.max_len, dtype),
-        out_shardings=cache_shard)
+    jit_init_cache = jax.jit(init_fn, out_shardings=cache_shard)
     jit_sample = jax.jit(_make_sample_fn(serve_cfg.temperature))
+
+    # cache-footprint accounting for the bench/stats rows: bytes one
+    # physical block costs across all layers (k+v), and what the dense
+    # ring cache would preallocate for the same (max_batch, max_len)
+    itemsize = dtype.itemsize
+    G, P_, KV, hd = TF.n_groups(cfg), TF.period(cfg), cfg.n_kv_heads, cfg.hd
+    block_bytes = 2 * P_ * G * bs * KV * hd * itemsize if paged else 0
+    ring_equiv = (2 * P_ * G * serve_cfg.max_batch * serve_cfg.max_len
+                  * KV * hd * itemsize)
 
     return ServeEngine(bundle=bundle, cfg=cfg, serve_cfg=serve_cfg,
                        parallel=parallel, mesh=mesh, policy=policy,
@@ -352,4 +559,8 @@ def make_serve_engine(model, serve_cfg: ServeConfig, mesh: Mesh, *,
                        cache_shardings=cache_shard,
                        jit_init_cache=jit_init_cache,
                        jit_prefill=jit_prefill, jit_decode=jit_decode,
-                       jit_sample=jit_sample, donate=donate)
+                       jit_sample=jit_sample, donate=donate,
+                       num_blocks=num_blocks,
+                       blocks_per_slot=blocks_per_slot,
+                       block_bytes=block_bytes,
+                       ring_equiv_cache_bytes=ring_equiv)

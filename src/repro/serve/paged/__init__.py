@@ -1,0 +1,10 @@
+"""PagedServe host bookkeeping: block pool, block tables, prefix cache.
+
+The device side (pool arrays, paged prefill/decode, the Pallas block-
+table kernel) lives in ``models/transformer.py`` +
+``kernels/paged_attention``; this package is the pure-Python control
+plane the engine loop drives (DESIGN.md §10).
+"""
+from repro.serve.paged.block_pool import (  # noqa: F401
+    BlockPool, NoFreeBlocks, PagedCacheManager)
+from repro.serve.paged.prefix_cache import RadixPrefixCache  # noqa: F401

@@ -35,7 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 
 @dataclasses.dataclass
@@ -83,6 +83,11 @@ class SlotScheduler:
         self._slots: List[Optional[Request]] = [None] * max_batch
         self._next_uid = 0
         self.results: Dict[int, List[int]] = {}
+        # observability: admission/eviction/queue counters, read via
+        # ``counters`` (the engine folds them into generate()'s stats row)
+        self.counters: Dict[str, int] = {
+            "admitted": 0, "skipped": 0, "evicted_budget": 0,
+            "evicted_eos": 0, "evicted_cache": 0, "peak_queue_depth": 0}
 
     # -- submission / admission --------------------------------------------
     def submit(self, prompt: Sequence[int], *, max_new_tokens: int = 32,
@@ -97,18 +102,56 @@ class SlotScheduler:
         req = Request(self._next_uid, prompt, max_new_tokens, eos_id)
         self._next_uid += 1
         self._queue.append(req)
+        self.counters["peak_queue_depth"] = max(
+            self.counters["peak_queue_depth"], len(self._queue))
         return req.uid
 
-    def admit(self) -> List[Tuple[int, Request]]:
-        """Move queued requests into free slots, FIFO, lowest slot first.
+    def admit(self, fits: Optional[Callable[[Request], bool]] = None
+              ) -> List[Tuple[int, Request]]:
+        """Move queued requests into free slots, lowest slot first.
         Returns the (slot, request) pairs admitted this call — the engine
-        prefills exactly these."""
+        prefills exactly these.
+
+        Without ``fits`` admission is strict FIFO. With ``fits`` (the
+        paged engine's block-budget check) a pending request whose demand
+        can't currently be met no longer blocks the line: the scheduler
+        *skips ahead* to the first queued request that fits, so a small
+        request behind a too-big one still gets the free slot. Skipped
+        requests keep their queue position (and FIFO priority) for the
+        next admission wave. ``fits`` is consulted once per candidate and
+        a True return admits immediately — stateful callbacks (block
+        reservations) can count on it.
+
+        >>> s = SlotScheduler(max_batch=1, max_len=64)
+        >>> big = s.submit([1] * 40); small = s.submit([2, 3])
+        >>> s.admit(fits=lambda r: len(r.prompt) <= 8)  # big can't fit...
+        [(0, Request(uid=1, prompt=[2, 3], max_new_tokens=32, eos_id=None, generated=[]))]
+        >>> s.pending, s.counters["skipped"]    # ...small admitted past it
+        (1, 1)
+        """
         out = []
+        charged = set()              # uids counted as skipped this call —
+        # each slot rescans from the queue head, so a stuck request must
+        # not inflate the counter once per free slot in the same wave
         for slot in range(self.max_batch):
-            if self._slots[slot] is None and self._queue:
-                req = self._queue.popleft()
-                self._slots[slot] = req
-                out.append((slot, req))
+            if self._slots[slot] is not None or not self._queue:
+                continue
+            pick = None
+            for i, req in enumerate(self._queue):
+                if fits is None or fits(req):
+                    pick = i
+                    break
+            if pick is None:         # nothing in the queue fits right now
+                break
+            for passed in list(self._queue)[:pick]:
+                if passed.uid not in charged:
+                    charged.add(passed.uid)
+                    self.counters["skipped"] += 1
+            req = self._queue[pick]
+            del self._queue[pick]
+            self._slots[slot] = req
+            self.counters["admitted"] += 1
+            out.append((slot, req))
         return out
 
     # -- decode-step bookkeeping -------------------------------------------
@@ -122,10 +165,16 @@ class SlotScheduler:
         # KVs (the newest token's KV is only written when the next decode
         # consumes it), so another token fits until total_len exceeds
         # max_len — evicting at >= would short every near-full request.
-        done = (len(req.generated) >= req.max_new_tokens
-                or (req.eos_id is not None and int(token) == req.eos_id)
-                or (not self.rollover and req.total_len > self.max_len))
+        if len(req.generated) >= req.max_new_tokens:
+            done, reason = True, "evicted_budget"
+        elif req.eos_id is not None and int(token) == req.eos_id:
+            done, reason = True, "evicted_eos"
+        elif not self.rollover and req.total_len > self.max_len:
+            done, reason = True, "evicted_cache"
+        else:
+            done = False
         if done:
+            self.counters[reason] += 1
             self.results[req.uid] = req.generated
             self._slots[slot] = None
         return done
@@ -137,6 +186,7 @@ class SlotScheduler:
 
     @property
     def pending(self) -> int:
+        """Current queue depth (requests submitted, not yet admitted)."""
         return len(self._queue)
 
     @property
