@@ -210,6 +210,16 @@ class ServeConfig:
     # memory win once the live-token ceiling is known)
     prefix_cache: bool = True        # paged: park finished requests' full
     # blocks in the radix cache so shared prompt prefixes skip prefill
+    prefill_chunk_tokens: int = 0    # paged: per-step token budget mixing
+    # live decode tokens with a bounded prefill slice — a long prompt
+    # prefills as fixed-size chunks across engine steps instead of one
+    # monolithic call that stalls every decoding slot's ITL; 0 = off
+    # (monolithic admission prefill, the pre-SLO behaviour)
+    preemption: str = "off"          # paged: "off" reserves worst-case
+    # generation blocks at admission; "recompute" admits optimistically
+    # and, when decode growth finds the pool empty, parks the newest
+    # request's blocks back to the radix cache and requeues it (prefix
+    # adoption makes its re-prefill nearly free)
     seed: int = 0
 
 

@@ -1,9 +1,10 @@
-"""Paged decode attention: block-pool KV cache + block-table kernel.
+"""Paged attention: block-pool KV cache + block-table kernels (decode
+and per-slot-offset chunked prefill).
 
-Public entry point lives in :mod:`repro.kernels.paged_attention.ops`;
-the Pallas kernel body in ``paged_attention.py``; the gather-then-dense
-oracle in ``ref.py`` (DESIGN.md §10).
+Public entry points live in :mod:`repro.kernels.paged_attention.ops`;
+the Pallas kernel bodies in ``paged_attention.py``; the gather-then-
+dense oracles in ``ref.py`` (DESIGN.md §10–11).
 """
 from repro.kernels.paged_attention.ops import (  # noqa: F401
-    BACKENDS, paged_decode_attention)
+    BACKENDS, paged_decode_attention, paged_prefill_attention)
 from repro.kernels.paged_attention.ref import gather_blocks  # noqa: F401

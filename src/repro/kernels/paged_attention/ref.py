@@ -1,11 +1,11 @@
-"""Pure-jnp oracle for paged decode attention.
+"""Pure-jnp oracles for paged attention (decode + chunked prefill).
 
 Gathers each slot's logical blocks into a dense (B, n_blocks·bs, KV, hd)
-cache through the block table, then runs the same masked single-query
-softmax as ``kernels/flash_attention/ref.decode_fwd`` — materialising
-exactly what the paged kernel streams block by block. This is both the
-``backend="xla"`` implementation behind ``ops.py`` and the parity oracle
-the interpret-mode tests compare the kernel against.
+cache through the block table, then runs the masked softmax dense —
+materialising exactly what the paged kernels stream block by block.
+These are both the ``backend="xla"`` implementations behind ``ops.py``
+and the parity oracles the interpret-mode tests compare the kernels
+against.
 """
 from __future__ import annotations
 
@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import ref as _flash_ref
+from repro.kernels.flash_attention.flash_attention import MASK_VALUE
 
 
 def gather_blocks(pool: jax.Array, tables: jax.Array) -> jax.Array:
@@ -32,3 +33,35 @@ def paged_decode_fwd(q, k_pool, v_pool, tables, kv_len, *, scale: float):
     v = gather_blocks(v_pool, tables)
     return _flash_ref.decode_fwd(q, k, v, kv_len.reshape(-1, 1),
                                  scale=scale)
+
+
+def paged_prefill_fwd(q, k_pool, v_pool, tables, q_off, kv_len, *,
+                      scale: float):
+    """Chunked-prefill oracle with per-slot query offsets.
+
+    q (B, Sq, H, hd) *model* layout — chunk queries, row r of slot b at
+    absolute position ``q_off[b] + r``; pools (N+1, bs, KV, hd) with the
+    chunk's K/V already committed; tables (B, nb) int32; kv_len (B,)
+    int32 valid cells. Returns (B, Sq, H, hd) q.dtype. Rows with no live
+    key (``kv_len == 0`` — non-admitted slots) emit exact zeros, matching
+    the kernel's dry-row convention.
+    """
+    B, Sq, H, hd = q.shape
+    KV = k_pool.shape[2]
+    k = gather_blocks(k_pool, tables)                # (B, L, KV, hd)
+    v = gather_blocks(v_pool, tables)
+    kx = jnp.repeat(k, H // KV, axis=2)
+    vx = jnp.repeat(v, H // KV, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,
+                   kx.astype(jnp.float32))
+    L = k.shape[1]
+    qpos = q_off[:, None] + jnp.arange(Sq)[None, :]          # (B, Sq)
+    kpos = jnp.arange(L)[None, None, :]                      # (1, 1, L)
+    live = (kpos <= qpos[..., None]) & (kpos < kv_len[:, None, None])
+    s = jnp.where(live[:, None], s, MASK_VALUE)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(live[:, None], jnp.exp(s - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    a = p / jnp.where(l == 0.0, 1.0, l)
+    o = jnp.einsum("bhqk,bkhd->bqhd", a, vx.astype(jnp.float32))
+    return o.astype(q.dtype)

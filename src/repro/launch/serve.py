@@ -105,6 +105,15 @@ def main():
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="paged: disable parking finished requests' "
                          "blocks for shared-prefix reuse")
+    ap.add_argument("--prefill-chunk-tokens", type=int, default=0,
+                    help="paged: per-step token budget for chunked "
+                         "prefill; long prompts prefill in slices that "
+                         "share the step with decodes (0 = monolithic)")
+    ap.add_argument("--preemption", default="off",
+                    choices=("off", "recompute"),
+                    help="paged: when the block pool runs dry mid-decode, "
+                         "park the newest request's blocks to the prefix "
+                         "cache and requeue it (recompute-on-resume)")
     ap.add_argument("--mesh", default="auto",
                     choices=("auto", "test", "single", "multi"))
     ap.add_argument("--devices", type=int, default=None,
@@ -125,6 +134,8 @@ def main():
                        block_size=args.block_size,
                        num_blocks=args.num_blocks,
                        prefix_cache=not args.no_prefix_cache,
+                       prefill_chunk_tokens=args.prefill_chunk_tokens,
+                       preemption=args.preemption,
                        seed=args.seed)
     try:
         engine = make_serve_engine(build(cfg), scfg, mesh)
@@ -160,7 +171,9 @@ def main():
           f"{stats['decode_steps']} decode steps, "
           f"{stats['prefill_calls']} prefill calls; "
           f"ttft p50 {stats['ttft_p50_s']*1e3:.1f}ms, "
-          f"itl p50 {stats['itl_p50_s']*1e3:.2f}ms")
+          f"itl p50 {stats['itl_p50_s']*1e3:.2f}ms (decode-only; "
+          f"wall p95 {stats['itl_wall_p95_s']*1e3:.2f}ms, "
+          f"prefill-stall p95 {stats['prefill_stall_p95_s']*1e3:.2f}ms)")
     if scfg.cache_mode == "paged":
         print(f"[serve] paged: {stats['prefix_hits']}/"
               f"{stats['prefix_lookups']} prefix hits, "
@@ -168,6 +181,10 @@ def main():
               f"peak {stats['peak_blocks_in_use']} blocks "
               f"({stats['peak_cache_bytes']/1e6:.2f} MB vs "
               f"{stats['ring_equiv_cache_bytes']/1e6:.2f} MB ring)")
+        if scfg.prefill_chunk_tokens or scfg.preemption != "off":
+            print(f"[serve] slo: {stats['prefill_chunks']} prefill chunks "
+                  f"over {stats['prefill_calls']} calls, "
+                  f"{stats['sched_preempted']} preemptions")
     print("sample:", gens[0][:12])
 
 

@@ -364,29 +364,33 @@ def _paged_commit(buf: Array, vals: Array, phys: Array, off: Array) -> Array:
 def attention_paged_prefill(x: Array, cache: PagedKVCache, tables: Array,
                             p: dict, cfg, policy: QuantPolicy, *,
                             admit: Array, pref_lens: Array,
-                            prompt_lens: Array, rope_cache=None
+                            prompt_lens: Array, rope_cache=None,
+                            impl: str = "flash_scan"
                             ) -> tuple[Array, PagedKVCache]:
     """Chunked prefill over a block table: run the prompt *suffix* whose
-    KV the prefix cache didn't already hold, attending to the adopted
-    prefix blocks plus the suffix's own causal keys.
+    KV isn't yet resident (not adopted from the prefix cache, not
+    committed by an earlier chunk), attending to the resident blocks plus
+    the suffix's own causal keys.
 
     x: (B, S, D) suffix tokens (positions ``pref_lens[b] + [0, S)`` of
-    each prompt) right-padded to a common S; ``pref_lens``: (B,) adopted
-    prefix lengths (multiples of block_size — only full blocks are
-    shared); ``prompt_lens``: (B,) full prompt lengths; ``admit``: (B,)
-    bool. The suffix K/V are committed into the slot's table blocks at
-    block granularity (non-admitted and pad positions land in the trash
-    block), so live neighbours' blocks are untouched.
+    each prompt) right-padded to a common S; ``pref_lens``: (B,) resident
+    prefix lengths — adopted full blocks at admission, or the chunked-
+    prefill progress cursor on resumed chunks; ``prompt_lens``: (B,)
+    prefill targets (cursor + chunk for a mid-prompt chunk); ``admit``:
+    (B,) bool. The suffix K/V are committed into the slot's table blocks
+    at block granularity (non-admitted and pad positions land in the
+    trash block), so live neighbours' blocks are untouched.
 
     With ``pref_lens == 0`` the math reduces exactly to the ring path's
-    dense prefill — adopted-prefix columns are masked to NEG_INF and
-    contribute exact zeros — which is what the paged-vs-ring parity tests
-    pin. Adopted prefix K/V are read back in cache dtype (they were
-    computed by the request that first filled them); suffix keys attend
-    in compute dtype like the ring path. The attention here is the dense
-    oracle on every backend: chunked-prefill flash tiles are future work
-    (ROADMAP), and prefill waves are rare next to decode steps.
-    """
+    dense prefill — prefix columns are masked to NEG_INF and contribute
+    exact zeros — which is what the paged-vs-ring parity tests pin.
+    Resident prefix K/V are read back in cache dtype; suffix keys attend
+    in compute dtype on the dense path. On ``xla`` (or ``impl="dense"``)
+    the attention is the gather-then-concat dense oracle, byte-for-byte
+    the pre-kernel path; on the Pallas backends the suffix KV is
+    committed *first* and the per-slot-offset flash prefill kernel
+    streams prefix and suffix uniformly from the pool (value-identical
+    when cache and compute dtype agree — the default)."""
     B, S, _ = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     bs, nb = cache.k.shape[1], tables.shape[1]
@@ -402,30 +406,6 @@ def attention_paged_prefill(x: Array, cache: PagedKVCache, tables: Array,
     q = PRM.constrain(q, ("batch", None, "heads", None))
     k = PRM.constrain(k, ("batch", None, "kv_heads", None))
 
-    # adopted prefix, gathered through the block table in logical order
-    k_pref = cache.k[tables].reshape(B, nb * bs, KV, hd)
-    v_pref = cache.v[tables].reshape(B, nb * bs, KV, hd)
-    kx = jnp.concatenate([_expand_kv(k_pref, H), _expand_kv(k, H)], axis=1)
-    vx = jnp.concatenate([_expand_kv(v_pref, H), _expand_kv(v, H)], axis=1)
-    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
-    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,
-                   kx.astype(jnp.float32))
-    # prefix columns: live iff < the slot's adopted prefix; suffix
-    # columns: plain causal (query i and key j share the pref offset)
-    dead_pref = (jnp.arange(nb * bs)[None, :]
-                 >= pref_lens[:, None])                       # (B, nb*bs)
-    dead_suf = jnp.arange(S)[None, :] > jnp.arange(S)[:, None]  # (S, S)
-    dead = jnp.concatenate(
-        [jnp.broadcast_to(dead_pref[:, None, None, :], (B, 1, S, nb * bs)),
-         jnp.broadcast_to(dead_suf[None, None], (B, 1, S, S))], axis=-1)
-    s = jnp.where(dead, NEG_INF, s)
-    a = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bhqk,bkhd->bqhd", a,
-                   vx.astype(jnp.float32)).astype(q.dtype)
-    o = o.reshape(B, S, H * hd)
-    wo = PRM.use_weight(p["wo"], ("heads", "embed"), policy.compute_dtype)
-    out = quant_linear(o, wo, policy=policy)
-
     # commit the suffix KV at block granularity; masked positions -> trash
     valid = admit[:, None] & (positions < prompt_lens[:, None])
     logical = jnp.clip(positions // bs, 0, nb - 1)
@@ -434,6 +414,47 @@ def attention_paged_prefill(x: Array, cache: PagedKVCache, tables: Array,
     off = jnp.where(valid, positions % bs, 0).reshape(-1)
     k_buf = _paged_commit(cache.k, k.reshape(B * S, KV, hd), phys, off)
     v_buf = _paged_commit(cache.v, v.reshape(B * S, KV, hd), phys, off)
+
+    backend = (policy.backend if impl != "dense"
+               and policy.backend in FLASH_BACKENDS else "xla")
+    if backend in FLASH_BACKENDS:
+        # commit-then-attend: with the chunk's KV just landed, the fused
+        # kernel reads prefix and suffix through the table in one sweep —
+        # no (B, nb*bs, H, hd) gather+concat materialisation
+        kv_valid = jnp.where(admit, prompt_lens, 0)
+        o = PA.paged_prefill_attention(q, k_buf, v_buf, tables, pref_lens,
+                                       kv_valid, backend=backend)
+    else:
+        # resident prefix, gathered through the table in logical order
+        # (from the pre-commit pools — commit cells are masked dead below,
+        # so the read set is disjoint from the cells written above)
+        k_pref = cache.k[tables].reshape(B, nb * bs, KV, hd)
+        v_pref = cache.v[tables].reshape(B, nb * bs, KV, hd)
+        kx = jnp.concatenate([_expand_kv(k_pref, H), _expand_kv(k, H)],
+                             axis=1)
+        vx = jnp.concatenate([_expand_kv(v_pref, H), _expand_kv(v, H)],
+                             axis=1)
+        scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+        s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,
+                       kx.astype(jnp.float32))
+        # prefix columns: live iff < the slot's resident prefix; suffix
+        # columns: plain causal (query i and key j share the pref offset)
+        dead_pref = (jnp.arange(nb * bs)[None, :]
+                     >= pref_lens[:, None])                   # (B, nb*bs)
+        dead_suf = (jnp.arange(S)[None, :]
+                    > jnp.arange(S)[:, None])                 # (S, S)
+        dead = jnp.concatenate(
+            [jnp.broadcast_to(dead_pref[:, None, None, :],
+                              (B, 1, S, nb * bs)),
+             jnp.broadcast_to(dead_suf[None, None], (B, 1, S, S))],
+            axis=-1)
+        s = jnp.where(dead, NEG_INF, s)
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", a,
+                       vx.astype(jnp.float32)).astype(q.dtype)
+    o = o.reshape(B, S, H * hd)
+    wo = PRM.use_weight(p["wo"], ("heads", "embed"), policy.compute_dtype)
+    out = quant_linear(o, wo, policy=policy)
     return out, PagedKVCache(k_buf, v_buf, cache.length)
 
 

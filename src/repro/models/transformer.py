@@ -243,7 +243,7 @@ def _layer_apply(x: Array, lp: Dict, cfg: ModelConfig, policy: QuantPolicy,
                 a, new_state = ATT.attention_paged_prefill(
                     h, state, tables, lp["attn"], cfg, policy, admit=admit,
                     pref_lens=pref_lens, prompt_lens=prompt_lens,
-                    rope_cache=rope_cache)
+                    rope_cache=rope_cache, impl=parallel.attn_impl)
             else:
                 a, new_state = ATT.attention_prefill(
                     h, state, lp["attn"], cfg, policy, admit=admit,

@@ -208,6 +208,38 @@ class ServeEngine:
         return self.jit_sample(logits, key)
 
     # -- the serving loop ---------------------------------------------------
+    def _empty_stats(self) -> Dict[str, float]:
+        """The stats-row schema, zero-valued — the single source of truth
+        for :meth:`generate`'s return shape. Both the ``max_new_tokens <
+        1`` early return and the measured path start from this dict, so a
+        new counter added here can never silently miss one of them (the
+        drift the old hand-maintained duplicate suffered)."""
+        scfg = self.serve_cfg
+        stats: Dict[str, float] = {
+            "new_tokens": 0, "prefill_tokens": 0, "decode_steps": 0,
+            "prefill_calls": 0, "prefill_chunks": 0,
+            "wall_s": 0.0, "prefill_s": 0.0,
+            "decode_s": 0.0, "tokens_per_s": 0.0,
+            "decode_tokens_per_s": 0.0,
+            "ttft_p50_s": 0.0, "ttft_p95_s": 0.0,
+            # itl_* is decode-only (prefill stalls subtracted); itl_wall_*
+            # keeps the raw wall-clock deltas and prefill_stall_* isolates
+            # what admission/chunk prefills cost decoding neighbours
+            "itl_p50_s": 0.0, "itl_p95_s": 0.0,
+            "itl_wall_p50_s": 0.0, "itl_wall_p95_s": 0.0,
+            "prefill_stall_p50_s": 0.0, "prefill_stall_p95_s": 0.0}
+        stats.update({f"sched_{k}": 0 for k in
+                      SlotScheduler(scfg.max_batch, scfg.max_len).counters})
+        if scfg.cache_mode == "paged":
+            stats.update({
+                "prefix_lookups": 0, "prefix_hits": 0,
+                "prefix_hit_rate": 0.0, "prefill_tokens_saved": 0,
+                "peak_blocks_in_use": 0, "num_blocks": self.num_blocks,
+                "peak_live_blocks": 0, "block_bytes": self.block_bytes,
+                "peak_cache_bytes": 0,
+                "ring_equiv_cache_bytes": self.ring_equiv_cache_bytes})
+        return stats
+
     def generate(self, params, prompts: Sequence[Sequence[int]], *,
                  max_new_tokens: int = 32, eos_id: Optional[int] = None,
                  seed: Optional[int] = None
@@ -215,12 +247,14 @@ class ServeEngine:
         """Continuously-batched generation for a list of prompts.
 
         Submits every prompt to a :class:`SlotScheduler`, then loops:
-        admit queued requests into free slots (one bucketed prefill call
-        per admission wave), decode one token for the whole batch, record
-        and evict finished sequences. Returns ``(generations, stats)``
-        where ``generations[i]`` is the token list for ``prompts[i]`` and
-        stats carries tokens/s, per-request TTFT and inter-token latency
-        percentiles, and the scheduler's admission/eviction counters (the
+        admit queued requests into free slots, run one bucketed prefill
+        call over every *prefilling* slot, decode one token for the whole
+        batch, record and evict finished sequences. Returns
+        ``(generations, stats)`` where ``generations[i]`` is the token
+        list for ``prompts[i]`` and stats carries tokens/s, per-request
+        TTFT, decode-only inter-token latency percentiles (plus the raw
+        wall-clock ``itl_wall_*`` and the isolated ``prefill_stall_*``),
+        and the scheduler's admission/eviction/preemption counters (the
         JSON row source for ``benchmarks/bench_serve.py``).
 
         Under ``cache_mode="paged"`` the loop additionally drives a
@@ -230,91 +264,109 @@ class ServeEngine:
         small request be admitted past a pending one whose block budget
         can't currently be met, decode grows tables one block at a time,
         and completion parks full blocks in the prefix cache for reuse.
-        Paged stats report prefix hit rates, prefill tokens saved, and
-        peak block/byte usage next to the ring-equivalent footprint.
+
+        With ``prefill_chunk_tokens > 0`` (paged only) each engine step
+        carries a fixed token budget mixing the live decode tokens with a
+        bounded slice of pending prefill: a long prompt advances by
+        chunks across waves (``Request.prefilled`` is the cursor) while
+        decoding neighbours keep streaming — flat ITL instead of one
+        monolithic stall. With ``preemption="recompute"`` admission stops
+        reserving worst-case generation blocks; when decode growth finds
+        the pool empty the newest occupied request is parked back to the
+        radix cache and requeued (its re-prefill adopts the parked
+        blocks, and greedy sampling makes the recompute exact).
         """
         scfg = self.serve_cfg
         B = scfg.max_batch
         paged = scfg.cache_mode == "paged"
+        preempt_on = paged and scfg.preemption == "recompute"
         if max_new_tokens < 1:       # prefill always samples one token
-            stats = {
-                "new_tokens": 0, "prefill_tokens": 0, "decode_steps": 0,
-                "prefill_calls": 0, "wall_s": 0.0, "prefill_s": 0.0,
-                "decode_s": 0.0, "tokens_per_s": 0.0,
-                "decode_tokens_per_s": 0.0,
-                "ttft_p50_s": 0.0, "ttft_p95_s": 0.0,
-                "itl_p50_s": 0.0, "itl_p95_s": 0.0}
-            stats.update({f"sched_{k}": 0 for k in
-                          SlotScheduler(B, scfg.max_len).counters})
-            if paged:
-                stats.update({
-                    "prefix_lookups": 0, "prefix_hits": 0,
-                    "prefix_hit_rate": 0.0, "prefill_tokens_saved": 0,
-                    "peak_blocks_in_use": 0, "num_blocks": self.num_blocks,
-                    "peak_live_blocks": 0, "block_bytes": self.block_bytes,
-                    "peak_cache_bytes": 0,
-                    "ring_equiv_cache_bytes": self.ring_equiv_cache_bytes})
-            return [[] for _ in prompts], stats
+            return [[] for _ in prompts], self._empty_stats()
         sched = SlotScheduler(B, scfg.max_len, rollover=scfg.rollover)
         uids = [sched.submit(p, max_new_tokens=max_new_tokens,
                              eos_id=eos_id) for p in prompts]
         mgr = fits = None
         if paged:
-            from repro.serve.paged import PagedCacheManager
+            from repro.serve.paged import NoFreeBlocks, PagedCacheManager
             mgr = PagedCacheManager(self.num_blocks, scfg.block_size, B,
                                     self.blocks_per_slot,
-                                    prefix_cache=scfg.prefix_cache)
-            fits = lambda r: mgr.fits(len(r.prompt), r.max_new_tokens,  # noqa: E731
-                                      prompt=r.prompt)
+                                    prefix_cache=scfg.prefix_cache,
+                                    preemption=preempt_on)
+            # a preempted request re-prefills prompt + generated-so-far,
+            # with only its remaining budget left to claim — context /
+            # remaining_new collapse to prompt / max_new_tokens otherwise
+            fits = lambda r: mgr.fits(len(r.context), r.remaining_new,  # noqa: E731
+                                      prompt=r.context)
         cache = self.init_cache()
         cur = np.zeros((B,), np.int32)        # next input token per slot
         key = jax.random.PRNGKey(scfg.seed if seed is None else seed)
-        n_new = n_prefill_tok = n_steps = n_prefills = 0
+        n_new = n_prefill_tok = n_steps = n_prefills = n_chunks = 0
         n_decoded = 0                         # tokens produced by decode steps
         prefill_s = decode_s = 0.0
         ttft: Dict[int, float] = {}           # uid -> first-token latency
-        itl: List[float] = []                 # inter-token deltas, all slots
+        itl: List[float] = []                 # decode-only inter-token deltas
+        itl_wall: List[float] = []            # raw wall-clock deltas
+        stalls: List[float] = []              # per-token prefill stall time
+        stall: Dict[int, float] = {}          # slot -> stall since last token
         last_t: Dict[int, float] = {}         # slot -> last token timestamp
         peak_live_blocks = 0
 
         def _finish(slot, r, now):
             last_t.pop(slot, None)
+            stall.pop(slot, None)
             if paged:
-                # KVs written: the prompt plus every generated token but
+                # KVs written: the context plus every decoded token but
                 # the last (never consumed); full blocks park for reuse
-                mgr.release(slot, r.prompt + r.generated[:-1])
+                mgr.release(slot, r.context[:-1])
+
+        def _preempt(vslot, vr, prefilling_set):
+            """Park ``vslot``'s blocks to the radix cache and requeue."""
+            written = (vr.context[:vr.prefilled]
+                       if vslot in prefilling_set else vr.context[:-1])
+            mgr.release(vslot, written)
+            sched.preempt(vslot)
+            last_t.pop(vslot, None)
+            stall.pop(vslot, None)
 
         t0 = time.perf_counter()
         while sched.has_work:
             if paged:
                 mgr.begin_wave()
             admits = sched.admit(fits=fits)
-            if admits:
+            for slot, r in admits:
+                # resident tokens: adopted prefix blocks (paged); the
+                # chunk loop below prefills context[prefilled:] from here
+                r.prefilled = (mgr.admit(slot, r.context, r.remaining_new)
+                               if paged else 0)
+            if paged and admits:
+                peak_live_blocks = max(peak_live_blocks, mgr.live_blocks)
+            prefilling = sched.prefilling
+            if prefilling:
                 t_pf = time.perf_counter()
+                decoding = [s for s, _ in sched.running]
+                if paged and scfg.prefill_chunk_tokens:
+                    # fixed per-step token budget: live decode tokens eat
+                    # into it first, the rest is split across prefills
+                    budget = max(
+                        scfg.prefill_chunk_tokens - len(decoding), 1)
+                    slice_ = max(budget // len(prefilling), 1)
+                else:
+                    slice_ = scfg.max_len          # monolithic prefill
+                chunks = {s: min(len(r.context) - r.prefilled, slice_)
+                          for s, r in prefilling}
+                # clamp: the bucket may round past a non-pow2 max_len, but
+                # the scheduler guarantees every prompt fits the cache
+                S = min(prefill_bucket(max(chunks.values()),
+                                       scfg.prefill_bucket), scfg.max_len)
+                toks = np.zeros((B, S), np.int32)
                 toks_l = np.ones((B,), np.int32)   # dummy 1 for idle slots
                 pref_l = np.zeros((B,), np.int32)
                 mask = np.zeros((B,), bool)
-                if paged:
-                    pref = {s: mgr.admit(s, r.prompt, r.max_new_tokens)
-                            for s, r in admits}
-                    # sample here too: a max_new_tokens=1 run finishes at
-                    # prefill and never reaches the decode-branch sample
-                    peak_live_blocks = max(peak_live_blocks,
-                                           mgr.live_blocks)
-                    longest = max(len(r.prompt) - pref[s] for s, r in admits)
-                else:
-                    pref = {s: 0 for s, _ in admits}
-                    longest = max(len(r.prompt) for _, r in admits)
-                # clamp: the bucket may round past a non-pow2 max_len, but
-                # the scheduler guarantees every prompt fits the cache
-                S = min(prefill_bucket(longest, scfg.prefill_bucket),
-                        scfg.max_len)
-                toks = np.zeros((B, S), np.int32)
-                for slot, r in admits:
-                    suffix = r.prompt[pref[slot]:]
-                    toks[slot, :len(suffix)] = suffix
-                    toks_l[slot] = len(r.prompt)
-                    pref_l[slot] = pref[slot]
+                for slot, r in prefilling:
+                    c = chunks[slot]
+                    toks[slot, :c] = r.context[r.prefilled:r.prefilled + c]
+                    toks_l[slot] = r.prefilled + c
+                    pref_l[slot] = r.prefilled
                     mask[slot] = True
                 key, k1 = jax.random.split(key)
                 if paged:
@@ -324,28 +376,56 @@ class ServeEngine:
                 else:
                     logits, cache = self.prefill(params, cache, toks,
                                                  toks_l, mask)
+                # sample here too: a max_new_tokens=1 run finishes at
+                # prefill and never reaches the decode-branch sample
                 tok = np.asarray(self.sample(logits[:, 0], k1))
                 now = time.perf_counter()
-                for slot, r in admits:
-                    done = sched.record(slot, tok[slot])
-                    cur[slot] = tok[slot]
-                    ttft[r.uid] = now - t0
-                    last_t[slot] = now
-                    if done:
-                        _finish(slot, r, now)
-                n_prefill_tok += int(sum(len(r.prompt) - pref[s]
-                                         for s, r in admits))
-                n_new += len(admits)
+                dur = now - t_pf
+                for slot, r in prefilling:
+                    r.prefilled += chunks[slot]
+                    if r.prefilled >= len(r.context):
+                        # prompt fully resident: first token sampled from
+                        # the last position's logits; slot joins decode
+                        done = sched.record(slot, tok[slot])
+                        cur[slot] = tok[slot]
+                        ttft.setdefault(r.uid, now - t0)
+                        last_t[slot] = now
+                        n_new += 1
+                        if done:
+                            _finish(slot, r, now)
+                for slot in decoding:
+                    # this prefill call sat between two of the slot's
+                    # decode tokens — charge it as stall, not decode ITL
+                    stall[slot] = stall.get(slot, 0.0) + dur
+                n_prefill_tok += int(sum(chunks.values()))
+                n_chunks += len(prefilling)
                 n_prefills += 1
-                prefill_s += now - t_pf
+                prefill_s += dur
             running = sched.running
             if not running:
                 continue
+            dead: set = set()                 # slots preempted this step
             if paged:
+                pf_set = {s for s, _ in sched.prefilling}
                 for slot, r in running:
                     # the KV write for this step lands at absolute
                     # position total_len - 1 (the token being consumed)
-                    mgr.ensure_block(slot, r.total_len - 1)
+                    while slot not in dead:
+                        try:
+                            mgr.ensure_block(slot, r.total_len - 1)
+                            break
+                        except NoFreeBlocks:
+                            if not preempt_on:
+                                raise
+                            # preempt-to-queue: park the newest occupied
+                            # request's blocks (they become evictable ->
+                            # the retry's alloc reclaims them) and requeue
+                            cands = [sq for sq in sched.occupied
+                                     if sq[0] not in dead]
+                            vslot, vr = max(cands,
+                                            key=lambda sq: sq[1].uid)
+                            _preempt(vslot, vr, pf_set)
+                            dead.add(vslot)
                 peak_live_blocks = max(peak_live_blocks, mgr.live_blocks)
             t_dec = time.perf_counter()
             key, k1 = jax.random.split(key)
@@ -356,15 +436,24 @@ class ServeEngine:
                 logits, cache = self.decode(params, cache, cur[:, None])
             tok = np.asarray(self.sample(logits[:, 0], k1))
             now = time.perf_counter()
+            n_live = 0
             for slot, r in running:
+                if slot in dead:              # preempted mid-step: its
+                    continue                  # table row decoded to trash
                 done = sched.record(slot, tok[slot])
                 cur[slot] = tok[slot]
-                itl.append(now - last_t[slot])
+                delta = now - last_t[slot]
+                stalled = stall.pop(slot, 0.0)
+                itl_wall.append(delta)
+                itl.append(max(delta - stalled, 0.0))
+                if stalled:
+                    stalls.append(stalled)
                 last_t[slot] = now
+                n_live += 1
                 if done:
                     _finish(slot, r, now)
-            n_new += len(running)
-            n_decoded += len(running)
+            n_new += n_live
+            n_decoded += n_live
             n_steps += 1
             decode_s += now - t_dec
         dt = time.perf_counter() - t0
@@ -373,15 +462,25 @@ class ServeEngine:
             return float(np.percentile(np.asarray(xs), p)) if xs else 0.0
 
         ttfts = [ttft[u] for u in uids if u in ttft]
-        stats = {"new_tokens": n_new, "prefill_tokens": n_prefill_tok,
-                 "decode_steps": n_steps, "prefill_calls": n_prefills,
-                 "wall_s": dt, "prefill_s": prefill_s, "decode_s": decode_s,
-                 "tokens_per_s": n_new / max(dt, 1e-9),
-                 "decode_tokens_per_s": n_decoded / max(decode_s, 1e-9),
-                 # per-request latency: TTFT includes queueing time (the
-                 # admission-latency signal paged-vs-ring is judged on)
-                 "ttft_p50_s": pct(ttfts, 50), "ttft_p95_s": pct(ttfts, 95),
-                 "itl_p50_s": pct(itl, 50), "itl_p95_s": pct(itl, 95)}
+        stats = self._empty_stats()
+        stats.update({
+            "new_tokens": n_new, "prefill_tokens": n_prefill_tok,
+            "decode_steps": n_steps, "prefill_calls": n_prefills,
+            "prefill_chunks": n_chunks,
+            "wall_s": dt, "prefill_s": prefill_s, "decode_s": decode_s,
+            "tokens_per_s": n_new / max(dt, 1e-9),
+            "decode_tokens_per_s": n_decoded / max(decode_s, 1e-9),
+            # per-request latency: TTFT includes queueing time (the
+            # admission-latency signal paged-vs-ring is judged on)
+            "ttft_p50_s": pct(ttfts, 50), "ttft_p95_s": pct(ttfts, 95),
+            # decode-only ITL: wall delta minus prefill stalls (the old
+            # itl_* conflated the two and hid exactly what chunked
+            # prefill fixes); itl_wall_* is the SLO a client feels
+            "itl_p50_s": pct(itl, 50), "itl_p95_s": pct(itl, 95),
+            "itl_wall_p50_s": pct(itl_wall, 50),
+            "itl_wall_p95_s": pct(itl_wall, 95),
+            "prefill_stall_p50_s": pct(stalls, 50),
+            "prefill_stall_p95_s": pct(stalls, 95)})
         stats.update({f"sched_{k}": v for k, v in sched.counters.items()})
         if paged:
             stats.update(mgr.stats())
@@ -444,6 +543,15 @@ def make_serve_engine(model, serve_cfg: ServeConfig, mesh: Mesh, *,
     # ceiling is known (admission throttles via the scheduler fits hook)
     num_blocks = (serve_cfg.num_blocks
                   or serve_cfg.max_batch * blocks_per_slot) if paged else 0
+    if serve_cfg.preemption not in ("off", "recompute"):
+        raise ValueError(f"preemption {serve_cfg.preemption!r} not in "
+                         "('off', 'recompute')")
+    if not paged and (serve_cfg.prefill_chunk_tokens
+                      or serve_cfg.preemption != "off"):
+        raise NotImplementedError(
+            "prefill_chunk_tokens / preemption are paged-cache features: "
+            "the ring cache has no block table to chunk against or park "
+            "into; set cache_mode='paged'")
     if paged:
         if serve_cfg.rollover:
             raise NotImplementedError(

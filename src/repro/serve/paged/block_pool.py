@@ -49,13 +49,29 @@ class NoFreeBlocks(RuntimeError):
 
 
 class BlockPool:
-    """Fixed pool of ``num_blocks`` physical block ids with refcounts."""
+    """Fixed pool of ``num_blocks`` physical block ids with refcounts.
+
+    Observers can :meth:`subscribe` to refcount transitions — the radix
+    prefix cache uses this to keep its evictable-block count incremental
+    (adoption and release happen through the pool, outside the cache's
+    own call surface)."""
 
     def __init__(self, num_blocks: int):
         assert num_blocks >= 1
         self.num_blocks = num_blocks
         self._free: List[int] = list(range(num_blocks - 1, -1, -1))
         self._ref: Dict[int, int] = {}
+        self._watchers: List = []
+
+    def subscribe(self, fn) -> None:
+        """Register ``fn(bid, refcount)`` to run after every refcount
+        change (alloc -> 1, retain -> +1, release -> -1 incl. 0)."""
+        self._watchers.append(fn)
+
+    def _notify(self, bid: int) -> None:
+        rc = self._ref.get(bid, 0)
+        for fn in self._watchers:
+            fn(bid, rc)
 
     def alloc(self) -> int:
         """Pop a free block; the caller owns one reference."""
@@ -64,6 +80,7 @@ class BlockPool:
                                "blocks)")
         bid = self._free.pop()
         self._ref[bid] = 1
+        self._notify(bid)
         return bid
 
     def retain(self, bid: int) -> None:
@@ -71,6 +88,7 @@ class BlockPool:
         if bid not in self._ref:
             raise ValueError(f"retain of free block {bid}")
         self._ref[bid] += 1
+        self._notify(bid)
 
     def release(self, bid: int) -> None:
         """Drop one reference; the block frees when the count hits 0."""
@@ -80,6 +98,7 @@ class BlockPool:
         if self._ref[bid] == 0:
             del self._ref[bid]
             self._free.append(bid)
+        self._notify(bid)
 
     def refcount(self, bid: int) -> int:
         return self._ref.get(bid, 0)
@@ -124,12 +143,14 @@ class PagedCacheManager:
     """
 
     def __init__(self, num_blocks: int, block_size: int, max_batch: int,
-                 blocks_per_slot: int, *, prefix_cache: bool = True):
+                 blocks_per_slot: int, *, prefix_cache: bool = True,
+                 preemption: bool = False):
         from repro.serve.paged.prefix_cache import RadixPrefixCache
         self.pool = BlockPool(num_blocks)
         self.block_size = block_size
         self.trash = num_blocks
         self.blocks_per_slot = blocks_per_slot
+        self.preemption = preemption
         self.cache: Optional[RadixPrefixCache] = (
             RadixPrefixCache(self.pool, block_size) if prefix_cache else None)
         self.tables = np.full((max_batch, blocks_per_slot), self.trash,
@@ -175,17 +196,29 @@ class PagedCacheManager:
         them (an adopted parked block can no longer be evicted to feed
         this same request's fresh allocations).
 
+        With ``preemption`` on, admission is *optimistic*: the demand is
+        only the prompt's blocks (no worst-case generation reservation),
+        so capacity parked for tokens that may never be generated is
+        handed to the queue instead — the engine preempts-to-queue when
+        decode growth later finds the pool genuinely empty. The loud
+        worst-case check below still applies either way: a request the
+        pool can *never* hold would otherwise preempt forever.
+
         Raises :class:`NoFreeBlocks` for a request the pool can *never*
         hold (capped worst-case demand > ``num_blocks``) — a loud
         misconfiguration error instead of an admission loop that spins
         forever.
         """
-        need = self.blocks_written(prompt_len, max_new_tokens)
-        if need > self.pool.num_blocks:
+        worst = self.blocks_written(prompt_len, max_new_tokens)
+        if worst > self.pool.num_blocks:
             raise NoFreeBlocks(
-                f"request needs {need} blocks worst-case but the pool "
+                f"request needs {worst} blocks worst-case but the pool "
                 f"holds {self.pool.num_blocks}; raise num_blocks (or "
                 "lower max_len / the token budget)")
+        need = worst
+        if self.preemption:
+            need = min(math.ceil(prompt_len / self.block_size),
+                       self.blocks_per_slot)
         hits = 0
         if prompt is not None and self.cache is not None:
             hits = self.cache.match_len(
@@ -228,7 +261,9 @@ class PagedCacheManager:
         bids = hits + [self._alloc() for _ in range(n_prompt - len(hits))]
         self.tables[slot, :n_prompt] = bids
         self._slot_blocks[slot] = bids
-        self._reserved[slot] = (
+        # optimistic admission keeps no generation reservation — decode
+        # growth competes for free blocks and the engine preempts on miss
+        self._reserved[slot] = 0 if self.preemption else (
             self.blocks_written(len(prompt), max_new_tokens) - n_prompt)
         self.peak_in_use = max(self.peak_in_use, self.pool.in_use)
         return len(hits) * self.block_size

@@ -48,13 +48,21 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 
 class _Node:
-    __slots__ = ("bid", "children", "parent", "last_used")
+    __slots__ = ("bid", "children", "parent", "last_used",
+                 "self_dirty", "n_dirty_children", "subtree_clean")
 
     def __init__(self, bid: Optional[int], parent: Optional["_Node"]):
         self.bid = bid
         self.parent = parent
         self.children: Dict[Tuple[int, ...], "_Node"] = {}
         self.last_used = 0
+        # incremental evictable accounting (see RadixPrefixCache.evictable):
+        # self_dirty    — pool refcount > 1 (some request holds the block)
+        # subtree_clean — neither this node nor any descendant is dirty,
+        #                 i.e. the node is reclaimable (now or by cascade)
+        self.self_dirty = False
+        self.n_dirty_children = 0
+        self.subtree_clean = False
 
 
 class RadixPrefixCache:
@@ -73,6 +81,61 @@ class RadixPrefixCache:
         self._root = _Node(None, None)
         self._tick = 0
         self.n_nodes = 0
+        # incremental evictable count: adoption and release change pool
+        # refcounts outside the cache's own call surface, so the cache
+        # watches the pool's refcount transitions and maintains per-node
+        # clean-subtree flags plus one global counter — O(depth) per
+        # transition instead of the old O(n_nodes) walk per probe.
+        self._by_bid: Dict[int, _Node] = {}
+        self._n_evictable = 0
+        pool.subscribe(self._on_refcount)
+
+    # -- incremental evictable bookkeeping -----------------------------------
+    def _reeval(self, node: _Node) -> None:
+        """Recompute ``subtree_clean`` for ``node`` and bubble any flip up
+        the ancestor chain, keeping ``_n_evictable`` and every parent's
+        ``n_dirty_children`` consistent."""
+        while node is not self._root:
+            clean = (not node.self_dirty) and node.n_dirty_children == 0
+            if clean == node.subtree_clean:
+                break
+            node.subtree_clean = clean
+            self._n_evictable += 1 if clean else -1
+            node.parent.n_dirty_children += -1 if clean else 1
+            node = node.parent
+
+    def _register(self, node: _Node) -> None:
+        """Track a freshly inserted node (already linked to its parent)."""
+        assert node.bid not in self._by_bid, f"block {node.bid} in trie twice"
+        self._by_bid[node.bid] = node
+        node.self_dirty = self.pool.refcount(node.bid) > 1
+        node.n_dirty_children = 0
+        node.subtree_clean = not node.self_dirty
+        if node.subtree_clean:
+            self._n_evictable += 1
+        else:
+            node.parent.n_dirty_children += 1
+            self._reeval(node.parent)
+
+    def _unregister(self, node: _Node) -> None:
+        """Stop tracking a node being evicted (still linked to parent)."""
+        del self._by_bid[node.bid]
+        if node.subtree_clean:
+            self._n_evictable -= 1
+        else:
+            node.parent.n_dirty_children -= 1
+            self._reeval(node.parent)
+
+    def _on_refcount(self, bid: int, refcount: int) -> None:
+        """Pool watcher: a resident block's refcount crossed a boundary
+        (adoption pins it, the last adopter's release unpins it)."""
+        node = self._by_bid.get(bid)
+        if node is None:
+            return
+        dirty = refcount > 1
+        if dirty != node.self_dirty:
+            node.self_dirty = dirty
+            self._reeval(node)
 
     def _keys(self, tokens: Sequence[int]) -> List[Tuple[int, ...]]:
         bs = self.block_size
@@ -124,6 +187,7 @@ class RadixPrefixCache:
                 node.children[key] = child
                 self.pool.retain(bid)
                 self.n_nodes += 1
+                self._register(child)
             child.last_used = self._tick
             node = child
 
@@ -151,6 +215,7 @@ class RadixPrefixCache:
                 break
             key, node = min(leaves, key=lambda kn: kn[1].last_used)
             del node.parent.children[key]
+            self._unregister(node)
             self.pool.release(node.bid)
             self.n_nodes -= 1
             freed += 1
@@ -160,11 +225,18 @@ class RadixPrefixCache:
     def evictable(self) -> int:
         """Blocks reclaimable right now *or after cascading* — every
         resident node whose subtree holds no outside references. Used by
-        admission accounting (``PagedCacheManager.fits``). O(n_nodes)
-        per call (adoption/release happen outside the cache's sight, so
-        the count can't be maintained incrementally without pool
-        callbacks) — fine at this repo's cache sizes; an incremental
-        scheme is on the ROADMAP serving backlog."""
+        admission accounting (``PagedCacheManager.fits``), once per
+        queued request per wave, so this is O(1): the count is maintained
+        incrementally via pool refcount-transition callbacks (adoption
+        and release happen outside the cache's call surface) plus
+        insert/evict hooks. :meth:`recount` is the O(n_nodes) oracle the
+        consistency test checks this against."""
+        return self._n_evictable
+
+    def recount(self) -> int:
+        """Recompute :attr:`evictable` from scratch by walking the trie —
+        the pre-incremental O(n_nodes) definition, kept as the assertion
+        oracle for the incremental accounting."""
         count = 0
 
         def rec(node: _Node) -> bool:

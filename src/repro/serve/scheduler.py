@@ -46,16 +46,39 @@ class Request:
     sampled continuation. A request is finished when ``generated`` reaches
     ``max_new_tokens``, when ``eos_id`` is sampled, or when prompt +
     generated hits the cache capacity (unless the scheduler rolls over).
+
+    ``prefilled`` is the chunked-prefill progress cursor: tokens of
+    ``context`` whose KV is already resident (adopted prefix blocks plus
+    committed chunks). The engine advances it one chunk per wave; a
+    request is still *prefilling* until it reaches ``len(context)`` and
+    the first sampled token is recorded. A preempted request re-enters
+    the queue with the cursor reset — its ``context`` (prompt plus
+    everything generated so far) is re-prefilled on the next admission,
+    which is what makes preempt-by-recompute exact.
     """
     uid: int
     prompt: List[int]
     max_new_tokens: int
     eos_id: Optional[int] = None
     generated: List[int] = dataclasses.field(default_factory=list)
+    prefilled: int = 0
 
     @property
     def total_len(self) -> int:
         return len(self.prompt) + len(self.generated)
+
+    @property
+    def context(self) -> List[int]:
+        """Tokens that must be KV-resident before the next decode — the
+        effective prompt on (re)admission: the original prompt plus the
+        continuation generated before any preemption."""
+        return self.prompt + self.generated
+
+    @property
+    def remaining_new(self) -> int:
+        """Token budget still unspent (= ``max_new_tokens`` until the
+        request is preempted mid-generation)."""
+        return self.max_new_tokens - len(self.generated)
 
 
 class SlotScheduler:
@@ -81,13 +104,15 @@ class SlotScheduler:
         self.rollover = rollover
         self._queue: deque[Request] = deque()
         self._slots: List[Optional[Request]] = [None] * max_batch
+        self._prefilling: set[int] = set()   # slots mid-chunked-prefill
         self._next_uid = 0
         self.results: Dict[int, List[int]] = {}
         # observability: admission/eviction/queue counters, read via
         # ``counters`` (the engine folds them into generate()'s stats row)
         self.counters: Dict[str, int] = {
             "admitted": 0, "skipped": 0, "evicted_budget": 0,
-            "evicted_eos": 0, "evicted_cache": 0, "peak_queue_depth": 0}
+            "evicted_eos": 0, "evicted_cache": 0, "preempted": 0,
+            "peak_queue_depth": 0}
 
     # -- submission / admission --------------------------------------------
     def submit(self, prompt: Sequence[int], *, max_new_tokens: int = 32,
@@ -122,10 +147,15 @@ class SlotScheduler:
         a True return admits immediately — stateful callbacks (block
         reservations) can count on it.
 
+        Admitted slots enter the *prefilling* state (cleared by the first
+        :meth:`record`): the engine runs their prompt — whole, or in
+        ``prefill_chunk_tokens`` slices across waves — before they join
+        the decode batch (``running``).
+
         >>> s = SlotScheduler(max_batch=1, max_len=64)
         >>> big = s.submit([1] * 40); small = s.submit([2, 3])
         >>> s.admit(fits=lambda r: len(r.prompt) <= 8)  # big can't fit...
-        [(0, Request(uid=1, prompt=[2, 3], max_new_tokens=32, eos_id=None, generated=[]))]
+        [(0, Request(uid=1, prompt=[2, 3], max_new_tokens=32, eos_id=None, generated=[], prefilled=0))]
         >>> s.pending, s.counters["skipped"]    # ...small admitted past it
         (1, 1)
         """
@@ -150,6 +180,7 @@ class SlotScheduler:
             req = self._queue[pick]
             del self._queue[pick]
             self._slots[slot] = req
+            self._prefilling.add(slot)
             self.counters["admitted"] += 1
             out.append((slot, req))
         return out
@@ -160,6 +191,7 @@ class SlotScheduler:
         when the request finished with it."""
         req = self._slots[slot]
         assert req is not None, f"slot {slot} is empty"
+        self._prefilling.discard(slot)    # first token => prefill complete
         req.generated.append(int(token))
         # cache edge: after k generated tokens the ring holds prompt+k-1
         # KVs (the newest token's KV is only written when the next decode
@@ -179,9 +211,62 @@ class SlotScheduler:
             self._slots[slot] = None
         return done
 
+    # -- preemption ----------------------------------------------------------
+    def preempt(self, slot: int) -> Request:
+        """Evict ``slot``'s request back to the queue (preempt-to-queue).
+
+        The request keeps everything generated so far; its prefill cursor
+        resets, so re-admission re-prefills ``context`` (prompt plus
+        continuation — with a prefix cache, adoption of the parked blocks
+        makes that nearly free). It re-enters the queue at its FIFO
+        arrival position (before any later-submitted request), so repeated
+        preemption cannot starve it behind fresh traffic.
+
+        >>> s = SlotScheduler(max_batch=1, max_len=16)
+        >>> a = s.submit([1, 2]); b = s.submit([3])
+        >>> _ = s.admit(); s.record(0, 7)
+        False
+        >>> s.preempt(0).uid                  # uid 0 back to the queue...
+        0
+        >>> back = s.admit()                  # ...ahead of uid 1
+        >>> [(sl, r.uid) for sl, r in back]
+        [(0, 0)]
+        >>> back[0][1].generated              # continuation survives
+        [7]
+        """
+        req = self._slots[slot]
+        assert req is not None, f"slot {slot} is empty"
+        self._slots[slot] = None
+        self._prefilling.discard(slot)
+        req.prefilled = 0
+        idx = next((i for i, q in enumerate(self._queue) if q.uid > req.uid),
+                   len(self._queue))
+        self._queue.insert(idx, req)
+        self.counters["preempted"] += 1
+        self.counters["peak_queue_depth"] = max(
+            self.counters["peak_queue_depth"], len(self._queue))
+        return req
+
     # -- introspection ------------------------------------------------------
     @property
     def running(self) -> List[Tuple[int, Request]]:
+        """Slots in the *decode* batch — occupied and past prefill. The
+        engine decodes exactly these; chunk-prefilling slots are listed
+        by :attr:`prefilling` instead."""
+        return [(i, r) for i, r in enumerate(self._slots)
+                if r is not None and i not in self._prefilling]
+
+    @property
+    def prefilling(self) -> List[Tuple[int, Request]]:
+        """Slots still working through their prompt (progress cursor in
+        ``Request.prefilled``) — one chunk per engine wave."""
+        return [(i, r) for i, r in enumerate(self._slots)
+                if r is not None and i in self._prefilling]
+
+    @property
+    def occupied(self) -> List[Tuple[int, Request]]:
+        """Every occupied slot, decoding or prefilling — the preemption
+        victim candidates."""
         return [(i, r) for i, r in enumerate(self._slots) if r is not None]
 
     @property

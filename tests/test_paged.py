@@ -15,7 +15,12 @@ paged-vs-ring parity (DESIGN.md §10).
   admission/eviction churn, shared-prefix reuse with slot churn (hit
   rate > 0 AND identical generations), peak memory < ring footprint,
   skip-ahead admission under block pressure.
-* SlotScheduler: fits-hook skip-ahead + counters.
+* SlotScheduler: fits-hook skip-ahead + counters, preempt-to-queue FIFO.
+* SLO serving (chunked prefill + preemption): per-slot-offset prefill
+  kernel vs the gather-then-dense oracle (ragged offsets, chunk
+  boundaries), chunked engine vs the ring oracle under slot churn,
+  preempted-request token parity vs an uncontended run, optimistic
+  admission accounting, incremental ``evictable`` vs the recount oracle.
 """
 import math
 
@@ -533,3 +538,206 @@ def test_scheduler_counters_track_evictions():
     assert s.counters["evicted_budget"] == 1
     assert s.counters["evicted_eos"] == 1
     assert s.counters["peak_queue_depth"] == 2
+
+
+def test_scheduler_preempt_requeues_fifo():
+    """preempt() must put the victim back at its FIFO arrival position
+    (before later uids), keep its generated continuation, and reset the
+    chunk cursor so re-prefill starts from scratch."""
+    s = SlotScheduler(max_batch=2, max_len=32)
+    for i in range(3):
+        s.submit([10 + i] * 4, max_new_tokens=4)
+    out = s.admit()
+    assert [r.uid for _, r in out] == [0, 1]
+    s.record(0, 5)
+    s.record(1, 6)
+    s.preempt(1)
+    assert s.counters["preempted"] == 1
+    assert s.pending == 2                    # uid 1 back in line, uid 2
+    out = s.admit()
+    assert len(out) == 1
+    slot, r = out[0]
+    assert (slot, r.uid) == (1, 1)           # ahead of uid 2 (FIFO)
+    assert r.generated == [6]                # continuation kept
+    assert r.prefilled == 0                  # cursor reset: full re-prefill
+    assert r.context == [11, 11, 11, 11, 6]
+    assert r.remaining_new == 3
+
+
+# ---------------------------------------------------------------------------
+# PR 6: chunked prefill, preemption, incremental evictable
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("H,KV,hd,bs,nb", [
+    (4, 4, 16, 8, 4),       # MHA
+    (8, 2, 16, 4, 6),       # GQA 4
+    (4, 1, 8, 4, 5),        # MQA, odd table width
+])
+def test_paged_prefill_kernel_matches_oracle(H, KV, hd, bs, nb):
+    """Per-slot-offset prefill tile vs the gather-then-dense oracle:
+    fresh chunk (q_off=0), resumed chunk at an unaligned cursor, and a
+    dry slot (kv_len=0) that must emit exact zeros on both paths."""
+    B, S, N = 3, 8, 20
+    keys = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(keys[0], (B, S, H, hd))
+    k_pool = jax.random.normal(keys[1], (N + 1, bs, KV, hd))
+    v_pool = jax.random.normal(keys[2], (N + 1, bs, KV, hd))
+    rng = np.random.default_rng(5)
+    tables = jnp.asarray(rng.permutation(N)[:B * nb].reshape(B, nb))
+    q_off = jnp.asarray([0, 5, 0], jnp.int32)
+    kv_len = jnp.asarray([S, 5 + S, 0], jnp.int32)
+    a = PA.paged_prefill_attention(q, k_pool, v_pool, tables, q_off,
+                                   kv_len, backend="xla")
+    b = PA.paged_prefill_attention(q, k_pool, v_pool, tables, q_off,
+                                   kv_len, backend="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=0, atol=1e-5)
+    assert np.all(np.asarray(a[2]) == 0)     # dry slot: exact zeros
+
+
+def test_paged_prefill_kernel_chunked_matches_monolithic():
+    """Prefilling in chunks with block-unaligned edges must reproduce the
+    one-shot prefill row-for-row on both backends — the q_off plumbing is
+    what makes chunk N see chunks 0..N-1 correctly."""
+    B, H, KV, hd, bs, nb = 2, 4, 2, 16, 4, 6
+    N, L = 12, 24
+    keys = jax.random.split(jax.random.PRNGKey(6), 3)
+    q = jax.random.normal(keys[0], (B, L, H, hd))
+    k_pool = jax.random.normal(keys[1], (N + 1, bs, KV, hd))
+    v_pool = jax.random.normal(keys[2], (N + 1, bs, KV, hd))
+    tables = jnp.arange(B * nb, dtype=jnp.int32).reshape(B, nb)
+    ones = jnp.ones((B,), jnp.int32)
+    for backend in ("xla", "pallas_interpret"):
+        mono = PA.paged_prefill_attention(q, k_pool, v_pool, tables,
+                                          0 * ones, L * ones,
+                                          backend=backend)
+        parts = [PA.paged_prefill_attention(q[:, a:b], k_pool, v_pool,
+                                            tables, a * ones, b * ones,
+                                            backend=backend)
+                 for a, b in ((0, 5), (5, 13), (13, 24))]
+        np.testing.assert_allclose(np.asarray(jnp.concatenate(parts, 1)),
+                                   np.asarray(mono), rtol=0, atol=1e-5)
+
+
+def test_engine_chunked_prefill_matches_ring(reduced):
+    """A long prompt chunk-prefilling across waves while short requests
+    stream through the other slots must generate exactly the ring
+    engine's tokens (commit-then-attend stays exact across chunk
+    boundaries, and decode waves interleave with resumed chunks)."""
+    ring, _, cfg = _engines(3)
+    chunked = make_serve_engine(
+        build(cfg), ServeConfig(cache_mode="paged", block_size=4,
+                                max_batch=3, max_len=32,
+                                quant_mode="int8_switchback",
+                                prefill_chunk_tokens=6,
+                                preemption="recompute"),
+        make_test_mesh((1, 1)))
+    params_host = jax.device_get(ring.init_params(0))
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).tolist()
+               for n in (20, 3, 17, 4, 9, 5)]
+    g1, _ = ring.generate(ring.shard_params(params_host), prompts,
+                          max_new_tokens=6)
+    g2, s2 = chunked.generate(chunked.shard_params(params_host), prompts,
+                              max_new_tokens=6)
+    assert g1 == g2
+    assert s2["prefill_chunks"] > len(prompts)   # long prompts really split
+    assert s2["itl_wall_p95_s"] >= s2["itl_p95_s"] >= 0
+
+
+def test_engine_preemption_token_parity(reduced):
+    """Pool pressure mid-decode preempts the newest request to the queue;
+    its recompute-on-resume continuation must reproduce the uncontended
+    run's tokens exactly — and the tight run must actually preempt."""
+    cfg = get_reduced_config(ARCH)
+    mesh = make_test_mesh((1, 1))
+
+    def eng(num_blocks):
+        return make_serve_engine(
+            build(cfg), ServeConfig(cache_mode="paged", block_size=4,
+                                    max_batch=2, max_len=32,
+                                    num_blocks=num_blocks,
+                                    quant_mode="int8_switchback",
+                                    preemption="recompute"), mesh)
+
+    roomy, tight = eng(0), eng(8)            # 8 < 2*8 ring-equiv blocks
+    params_host = jax.device_get(roomy.init_params(0))
+    rng = np.random.default_rng(8)
+    prompts = [rng.integers(0, cfg.vocab_size, size=10).tolist()
+               for _ in range(2)]
+    g1, s1 = roomy.generate(roomy.shard_params(params_host), prompts,
+                            max_new_tokens=20)
+    g2, s2 = tight.generate(tight.shard_params(params_host), prompts,
+                            max_new_tokens=20)
+    assert g1 == g2
+    assert s1["sched_preempted"] == 0
+    assert s2["sched_preempted"] >= 1
+    assert all(len(g) == 20 for g in g2)     # preemptee still completed
+
+
+def test_manager_optimistic_admission_drops_reservations():
+    """preemption=True switches fits() from worst-case reservations to
+    prompt-only demand (preempt-to-queue is the safety net), but a
+    request whose worst case can never fit the pool still raises."""
+    strict = PagedCacheManager(num_blocks=6, block_size=4, max_batch=2,
+                               blocks_per_slot=8, prefix_cache=False)
+    opt = PagedCacheManager(num_blocks=6, block_size=4, max_batch=2,
+                            blocks_per_slot=8, prefix_cache=False,
+                            preemption=True)
+    for m in (strict, opt):
+        m.begin_wave()
+        assert m.fits(8, 16)                 # worst case exactly 6 blocks
+        m.admit(0, list(range(8)), max_new_tokens=16)
+        m.begin_wave()
+    assert not strict.fits(8, 16)            # reservation blocks slot 1
+    assert opt.fits(8, 16)                   # optimistic: prompt's 2 only
+    opt.admit(1, list(range(8)), max_new_tokens=16)
+    assert opt.pool.in_use == 4
+    with pytest.raises(NoFreeBlocks):
+        opt.fits(32, 1)                      # 8 blocks > pool, ever
+
+
+def test_prefix_cache_evictable_incremental_matches_recount():
+    """Churn workload: random insert/adopt/release/evict interleavings —
+    the incremental evictable count must equal the O(n) recount oracle
+    after every single operation."""
+    pool = BlockPool(64)
+    cache = RadixPrefixCache(pool, 2)
+    rng = np.random.default_rng(7)
+    adopted = []                             # references we hold
+    for _ in range(150):
+        op = rng.integers(0, 4)
+        if op == 0 and pool.free >= 4:       # park a (shared-prefix) chain
+            n = int(rng.integers(1, 5))
+            toks = rng.integers(0, 3, size=2 * n).tolist()
+            have = cache.match(toks, max_blocks=n)
+            fresh = [pool.alloc() for _ in range(n - len(have))]
+            cache.insert(toks, have + fresh)
+            for bid in have + fresh:
+                pool.release(bid)
+        elif op == 1:                        # adopt and hold
+            toks = rng.integers(0, 3,
+                                size=2 * int(rng.integers(1, 5))).tolist()
+            adopted.extend(cache.match(toks, max_blocks=4))
+        elif op == 2 and adopted:            # an adopter finishes
+            pool.release(adopted.pop(rng.integers(len(adopted))))
+        else:
+            cache.evict(int(rng.integers(1, 3)))
+        assert cache.evictable == cache.recount()
+    for bid in adopted:
+        pool.release(bid)
+    assert cache.evictable == cache.recount()
+    cache.evict(64)
+    assert cache.evictable == cache.recount() == 0
+
+
+def test_engine_rejects_bad_slo_config():
+    cfg = get_reduced_config(ARCH)
+    mesh = make_test_mesh((1, 1))
+    for kw in (dict(prefill_chunk_tokens=8), dict(preemption="recompute")):
+        with pytest.raises(NotImplementedError):     # ring: paged-only
+            make_serve_engine(build(cfg), ServeConfig(**kw), mesh)
+    with pytest.raises(ValueError):
+        make_serve_engine(
+            build(cfg), ServeConfig(cache_mode="paged",
+                                    preemption="bogus"), mesh)
