@@ -37,6 +37,19 @@ Two row kinds land in the JSON:
   loudly if the chunked run's *wall-clock* ITL p95 regresses past the
   monolithic run's (the PR-6 acceptance figure is <= 0.5x; the gate is
   a no-regression check so CPU-container noise can't flake CI).
+* ``bench: "serve_spec"`` — the speculative-decoding workload
+  (``modeled: false``): the same engine config runs ``spec_mode="off"``
+  vs ``spec_mode="ngram"`` on a *repetitive* prompt set (constant-token
+  prompts, the degenerate copy task greedy decode locks onto, so the
+  n-gram proposer drafts well) and a *non-repetitive* one (random
+  tokens, acceptance ~= 0, every step falls back to plain Sq=1 decode).
+  Generations are asserted token-identical in all four runs (greedy spec
+  is exact, not approximate). The run fails loudly if the repetitive
+  workload's ``tokens_per_model_pass`` isn't > 1.5 (the PR-7 acceptance
+  figure: fewer weight passes per token is the speedup mechanism and is
+  timer-free, so CPU-container noise can't flake it) or if the
+  non-repetitive spec run's tokens/s regresses below 0.85x the off run
+  (the proposer + fallback must be ~free when nothing drafts).
 * ``bench: "serve_prefill_kernel"`` — the xla-vs-pallas contrast for
   the per-slot-offset chunked-prefill kernel. On a TPU it wall-clocks
   both backends through the dispatch layer (``modeled: false``); on
@@ -218,6 +231,106 @@ def interference_row(arch: str, params_host, *, n_short: int = 3,
             "tokens_match": True}
 
 
+def spec_row(arch: str, params_host, *, batch: int = 4,
+             n_requests: int = 6, prompt_len: int = 10,
+             new_tokens: int = 24, rand_new_tokens: int = 8,
+             quant_mode: str, backend: str, block_size: int,
+             spec_k: int = 6, repeats: int = 3) -> dict:
+    """Spec-vs-off on a repetitive and a non-repetitive workload.
+
+    The repetitive workload is the degenerate copy task: each request's
+    prompt repeats one token, which reliably drives the reduced model's
+    greedy decode into self-repeating loops — the regime prompt-lookup
+    drafting targets (real checkpoints reach it on copy-heavy prompts:
+    summarisation, code edit, retrieval). ``tokens_per_model_pass`` is
+    the figure of merit — host-timer-free, so CPU noise can't flake it.
+    The random workload measures pure overhead: ``spec_min_ngram=2`` +
+    a short budget keep accidental drafts near zero, so the spec engine
+    must ride the plain Sq=1 decode path at (near) full throughput.
+    Both workloads assert exact token parity with the off engine.
+
+    The row pins f32 activations (same as the parity tests): greedy
+    accept/reject is exact whenever per-position logits don't depend on
+    the query-block shape, and with bf16 activations the f32 attention
+    reductions (Sq=k+1 verify vs Sq=1 decode) can land a ULP apart,
+    which int8 quantization boundaries occasionally amplify into an
+    argmax flip at a near-tie — numerics wobble, not a spec bug, the
+    same class the ring-vs-paged parity suite avoids the same way."""
+    cfg = get_reduced_config(arch)
+    max_len = prompt_len + n_requests + new_tokens + block_size
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, size=n_requests)
+    rep = [[int(t)] * (prompt_len + i) for i, t in enumerate(toks)]
+    rand = [rng.integers(0, cfg.vocab_size,
+                         size=prompt_len + i % 3).tolist()
+            for i in range(n_requests)]
+    import jax.numpy as jnp
+
+    from repro.core.precision import QuantPolicy
+    pol = QuantPolicy(quant_mode, compute_dtype=jnp.float32,
+                      backend=backend)
+    mesh = make_test_mesh((1, 1))
+    engines = {}
+    # rep drafts aggressively (min_ngram=1: a one-token loop is a
+    # draftable signal); rand uses the anti-flake default (min_ngram=2)
+    for mode, min_ngram in (("off", 2), ("rep", 1), ("rand", 2)):
+        scfg = ServeConfig(max_batch=batch, max_len=max_len,
+                           quant_mode=quant_mode, kernel_backend=backend,
+                           cache_mode="paged", block_size=block_size,
+                           spec_mode="off" if mode == "off" else "ngram",
+                           spec_k=spec_k, spec_min_ngram=min_ngram)
+        engines[mode] = make_serve_engine(build(cfg), scfg, mesh,
+                                          policy=pol)
+    params = engines["off"].shard_params(params_host)
+    out = {}
+    for wl, prompts, nt in (("rep", rep, new_tokens),
+                            ("rand", rand, rand_new_tokens)):
+        for mode in ("off", wl):
+            engine = engines[mode]
+            # warm on the exact workload: generation is deterministic,
+            # so this compiles every executable the timed repeats will
+            # touch — including the verify pass, which only fires once
+            # a draftable n-gram shows up mid-generation (a short
+            # generic warmup would leave it compiling inside the timer)
+            engine.generate(params, prompts, max_new_tokens=nt)
+            best = None
+            for _ in range(max(repeats, 1)):
+                gens, s = engine.generate(params, prompts,
+                                          max_new_tokens=nt)
+                if best is None or s["tokens_per_s"] > best[1][
+                        "tokens_per_s"]:
+                    best = (gens, s)
+            out[wl, mode] = best
+        assert out[wl, wl][0] == out[wl, "off"][0], \
+            f"spec generations diverged from the off oracle ({wl})"
+    rs, ns = out["rep", "rep"][1], out["rand", "rand"][1]
+    return {"bench": "serve_spec", "modeled": False, "arch": arch,
+            "backend": backend, "quant_mode": quant_mode,
+            "max_batch": batch, "n_requests": n_requests,
+            "prompt_len": prompt_len, "new_tokens": new_tokens,
+            "rand_new_tokens": rand_new_tokens,
+            "block_size": block_size,
+            "spec_k": spec_k, "spec_min_ngram": 2,
+            "rep_spec_min_ngram": 1,
+            "rep_tokens_per_model_pass": rs["tokens_per_model_pass"],
+            "rep_acceptance_rate": rs["spec_acceptance_rate"],
+            "rep_drafted": rs["spec_drafted"],
+            "rep_accepted": rs["spec_accepted"],
+            "rep_verify_calls": rs["spec_verify_calls"],
+            "rep_decode_steps": rs["decode_steps"],
+            "rep_spec_tokens_per_s": rs["tokens_per_s"],
+            "rep_off_tokens_per_s": out["rep", "off"][1]["tokens_per_s"],
+            "rand_tokens_per_model_pass": ns["tokens_per_model_pass"],
+            "rand_acceptance_rate": ns["spec_acceptance_rate"],
+            "rand_drafted": ns["spec_drafted"],
+            "rand_spec_tokens_per_s": ns["tokens_per_s"],
+            "rand_off_tokens_per_s": out["rand", "off"][1]["tokens_per_s"],
+            "rand_tokens_per_s_ratio": (
+                ns["tokens_per_s"]
+                / max(out["rand", "off"][1]["tokens_per_s"], 1e-12)),
+            "tokens_match": True}
+
+
 def kernel_contrast_row(arch: str, *, batch: int = 8,
                         prompt_len: int = 512, chunk_tokens: int = 128,
                         block_size: int = 16) -> dict:
@@ -303,7 +416,9 @@ def run(out_json: str | None = None, *, arch: str = "smollm-360m",
         prefix: bool = True, sys_prompt_len: int = 48, tail_len: int = 6,
         prefix_requests: int = 8, interference: bool = True,
         long_len: int = 160, chunk_tokens: int = 32, inter_shorts: int = 3,
-        inter_longs: int = 6, inter_new_tokens: int = 48) -> list:
+        inter_longs: int = 6, inter_new_tokens: int = 48,
+        spec: bool = True, spec_k: int = 6, spec_requests: int = 6,
+        spec_new_tokens: int = 24) -> list:
     batches = []
     b = 1
     while b < max_batch:
@@ -382,6 +497,31 @@ def run(out_json: str | None = None, *, arch: str = "smollm-360m",
                 print(f"{backend:>16} interference | FAIL: chunked prefill "
                       "regressed wall-clock ITL p95 vs monolithic")
                 ok = False
+        if spec and "paged" in cache_modes:
+            srow = spec_row(arch, params_host, batch=min(max_batch, 4),
+                            n_requests=spec_requests,
+                            new_tokens=spec_new_tokens,
+                            quant_mode=quant_mode, backend=backend,
+                            block_size=block_size, spec_k=spec_k,
+                            repeats=repeats)
+            rows.append(srow)
+            tpp = srow["rep_tokens_per_model_pass"]
+            ratio = srow["rand_tokens_per_s_ratio"]
+            print(f"{backend:>16} spec | repetitive: {tpp:.2f} tokens per "
+                  f"model pass ({srow['rep_accepted']}/"
+                  f"{srow['rep_drafted']} drafts accepted, rate "
+                  f"{srow['rep_acceptance_rate']:.2f}, "
+                  f"{srow['rep_verify_calls']} verify calls); random: "
+                  f"{srow['rand_tokens_per_model_pass']:.2f} tokens/pass, "
+                  f"{ratio:.2f}x off-mode tokens/s")
+            if tpp <= 1.5:
+                print(f"{backend:>16} spec | FAIL: <= 1.5 tokens per model "
+                      "pass on the repetitive workload")
+                ok = False
+            if ratio < 0.85:
+                print(f"{backend:>16} spec | FAIL: spec overhead at "
+                      "acceptance ~= 0 regressed tokens/s below 0.85x off")
+                ok = False
     krow = kernel_contrast_row(arch, block_size=block_size)
     rows.append(krow)
     sp = (krow["modeled_prefill_speedup"] if krow["modeled"]
@@ -417,6 +557,10 @@ if __name__ == "__main__":
                     help="skip the prefix-heavy workload row")
     ap.add_argument("--no-interference", action="store_true",
                     help="skip the long-prompt-interference SLO row")
+    ap.add_argument("--no-spec", action="store_true",
+                    help="skip the speculative-decoding workload row")
+    ap.add_argument("--spec-k", type=int, default=6,
+                    help="spec row: max drafted tokens per slot per step")
     ap.add_argument("--repeats", type=int, default=3,
                     help="timed repeats per row (best kept; damps noise)")
     ap.add_argument("--smoke", action="store_true",

@@ -220,7 +220,22 @@ class ServeConfig:
     # and, when decode growth finds the pool empty, parks the newest
     # request's blocks back to the radix cache and requeues it (prefix
     # adoption makes its re-prefill nearly free)
-    seed: int = 0
+    spec_mode: str = "off"           # off|ngram — "ngram" drafts up to
+    # spec_k tokens per slot from the request's own prompt+generated
+    # history (prompt lookup, no draft model) and verifies them all in
+    # one k-query paged_prefill call; greedy acceptance keeps output
+    # token-for-token identical to "off" (paged cache only, greedy
+    # temperature==0 steps only — sampling steps fall back to plain
+    # one-token decode). DESIGN.md §12.
+    spec_k: int = 4                  # spec: max drafted tokens per slot
+    spec_ngram: int = 3              # spec: longest history n-gram matched
+    spec_min_ngram: int = 2          # spec: shortest n-gram accepted as a
+    # match — 1 drafts on any repeated token (max acceptance on loopy
+    # text), 2+ avoids paying padded verify calls for accidental
+    # single-token matches on non-repetitive traffic
+    seed: int = 0                    # engine PRNG seed: temperature>0
+    # sampling folds (seed, request uid, generation step) into the key,
+    # so sampled generations are reproducible across batching/scheduling
 
 
 @dataclasses.dataclass(frozen=True)

@@ -68,6 +68,14 @@ def paged_prefill_attention(q, k_pool, v_pool, tables, q_off, kv_len, *,
     backends the kernel streams each slot's live blocks once per Q tile
     (per-slot causal + length skip on FLOPs *and* DMA); on ``xla`` it is
     the gather-then-dense oracle.
+
+    Besides chunked prefill this is also the speculative-decoding verify
+    primitive: the engine scores k drafted tokens + 1 in one call with
+    S = spec_k + 1 and ``q_off`` = the slot's resident length, reading
+    all S logit rows instead of the last. Row r then reproduces exactly
+    what a plain decode at absolute position ``q_off + r`` would compute
+    (same committed pool cells, same causal window), which is what makes
+    greedy accept/reject exact rather than approximate.
     """
     B, S, H, hd = q.shape
     KV = k_pool.shape[2]

@@ -23,6 +23,12 @@ the pipeline issues the fetch:
 * dead table entries (freed blocks, idle slots parked on the trash block)
   are never dereferenced beyond the clamp, so a stale id costs nothing.
 
+The prefill kernel is deliberately shape-generic in S: the serve engine
+reuses it at S = spec_k + 1 as the speculative-decoding verify pass
+(q_off = resident length, one Q tile covering the current token plus the
+n-gram draft), so the same per-slot-offset streaming that amortises
+chunked prefill also scores k draft positions for one weight pass.
+
 Same numerics discipline as every kernel in this repo: f32 on the MXU via
 ``preferred_element_type``, finite ``MASK_VALUE`` masking (never -inf),
 online softmax with (m, l, acc) VMEM scratch. The pure-jnp oracle is

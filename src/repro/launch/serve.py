@@ -114,6 +114,17 @@ def main():
                     help="paged: when the block pool runs dry mid-decode, "
                          "park the newest request's blocks to the prefix "
                          "cache and requeue it (recompute-on-resume)")
+    ap.add_argument("--spec-mode", default="off", choices=("off", "ngram"),
+                    help="paged + greedy: n-gram speculative decoding — "
+                         "draft from the request's own history, verify "
+                         "all drafts in one paged-prefill pass, roll "
+                         "back rejected tail blocks (DESIGN §12)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="spec: max drafted tokens per slot per step")
+    ap.add_argument("--spec-ngram", type=int, default=3,
+                    help="spec: longest history n-gram to match")
+    ap.add_argument("--spec-min-ngram", type=int, default=2,
+                    help="spec: shortest n-gram worth a verify pass")
     ap.add_argument("--mesh", default="auto",
                     choices=("auto", "test", "single", "multi"))
     ap.add_argument("--devices", type=int, default=None,
@@ -136,6 +147,10 @@ def main():
                        prefix_cache=not args.no_prefix_cache,
                        prefill_chunk_tokens=args.prefill_chunk_tokens,
                        preemption=args.preemption,
+                       spec_mode=args.spec_mode,
+                       spec_k=args.spec_k,
+                       spec_ngram=args.spec_ngram,
+                       spec_min_ngram=args.spec_min_ngram,
                        seed=args.seed)
     try:
         engine = make_serve_engine(build(cfg), scfg, mesh)
@@ -185,6 +200,13 @@ def main():
             print(f"[serve] slo: {stats['prefill_chunks']} prefill chunks "
                   f"over {stats['prefill_calls']} calls, "
                   f"{stats['sched_preempted']} preemptions")
+        if scfg.spec_mode != "off":
+            print(f"[serve] spec: {stats['spec_accepted']}/"
+                  f"{stats['spec_drafted']} drafts accepted "
+                  f"({stats['spec_acceptance_rate']:.2f}) over "
+                  f"{stats['spec_verify_calls']} verify calls — "
+                  f"{stats['tokens_per_model_pass']:.2f} tokens per "
+                  f"model pass")
     print("sample:", gens[0][:12])
 
 

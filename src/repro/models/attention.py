@@ -384,13 +384,15 @@ def attention_paged_prefill(x: Array, cache: PagedKVCache, tables: Array,
     With ``pref_lens == 0`` the math reduces exactly to the ring path's
     dense prefill — prefix columns are masked to NEG_INF and contribute
     exact zeros — which is what the paged-vs-ring parity tests pin.
-    Resident prefix K/V are read back in cache dtype; suffix keys attend
-    in compute dtype on the dense path. On ``xla`` (or ``impl="dense"``)
-    the attention is the gather-then-concat dense oracle, byte-for-byte
-    the pre-kernel path; on the Pallas backends the suffix KV is
-    committed *first* and the per-slot-offset flash prefill kernel
-    streams prefix and suffix uniformly from the pool (value-identical
-    when cache and compute dtype agree — the default)."""
+    Prefix *and* suffix K/V attend in cache dtype (commit-then-attend:
+    what the pool stores is what the scores see) so a later decode —
+    or a speculative verify pass re-scoring the same positions — reads
+    bit-identical keys. On ``xla`` (or ``impl="dense"``) the attention
+    is the gather-then-concat dense oracle; on the Pallas backends the
+    suffix KV is committed *first* and the per-slot-offset flash prefill
+    kernel streams prefix and suffix uniformly from the pool. Both are
+    value-identical to the ring dense prefill when cache and compute
+    dtype agree — which is what the parity tests pin."""
     B, S, _ = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     bs, nb = cache.k.shape[1], tables.shape[1]
@@ -427,12 +429,22 @@ def attention_paged_prefill(x: Array, cache: PagedKVCache, tables: Array,
     else:
         # resident prefix, gathered through the table in logical order
         # (from the pre-commit pools — commit cells are masked dead below,
-        # so the read set is disjoint from the cells written above)
+        # so the read set is disjoint from the cells written above). The
+        # suffix K/V round-trip through the cache dtype so the oracle
+        # attends the same bits the pool holds — commit-then-attend, like
+        # the kernel path. Decode re-reads these cells rounded, so the
+        # speculative verify pass (Sq = k+1 through this function) scores
+        # draft positions with the same values a plain decode would; fresh
+        # compute-dtype suffix keys would put ~bf16-epsilon noise on the
+        # logits and flip greedy argmax at near-ties, breaking spec/off
+        # token parity.
+        k_suf = k.astype(cache.k.dtype).astype(k.dtype)
+        v_suf = v.astype(cache.v.dtype).astype(v.dtype)
         k_pref = cache.k[tables].reshape(B, nb * bs, KV, hd)
         v_pref = cache.v[tables].reshape(B, nb * bs, KV, hd)
-        kx = jnp.concatenate([_expand_kv(k_pref, H), _expand_kv(k, H)],
+        kx = jnp.concatenate([_expand_kv(k_pref, H), _expand_kv(k_suf, H)],
                              axis=1)
-        vx = jnp.concatenate([_expand_kv(v_pref, H), _expand_kv(v, H)],
+        vx = jnp.concatenate([_expand_kv(v_pref, H), _expand_kv(v_suf, H)],
                              axis=1)
         scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
         s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,

@@ -555,6 +555,27 @@ def init_paged_serve_state(cfg: ModelConfig, num_blocks: int,
             for i in range(P)}
 
 
+def set_serve_lengths(states, lens: Array):
+    """Overwrite every group's per-slot lengths with ``lens`` (B,) int32.
+
+    The host scheduler is the source of truth for how many KV cells per
+    slot are *valid*; the device leaf normally tracks it for free (+1
+    per decode step, ``prompt_lens`` on prefill), but a speculative
+    verify call commits draft KVs optimistically and a partial rejection
+    leaves the leaf over-counting. The engine re-syncs from host truth
+    with this (one tiny jitted update, cache donated) lazily — only
+    before a plain decode step actually reads the leaf again
+    (DESIGN.md §12).
+    """
+    out = {}
+    for key, st in states.items():
+        G = st.length.shape[0]
+        new = jnp.broadcast_to(lens.astype(jnp.int32)[None, :],
+                               (G, lens.shape[0]))
+        out[key] = st._replace(length=new)
+    return out
+
+
 def paged_state_logical_axes(cfg: ModelConfig):
     """Logical axes for the paged serve state. Blocks are shared across
     batch slots, so the pool cannot shard over ``data`` the way the ring

@@ -1,8 +1,12 @@
 """Continuously-batched, sharded inference (the serving twin of
 ``repro.train``): ServeEngine + SlotScheduler, plus the PagedServe
-block-pool subsystem (``cache_mode="paged"``). See DESIGN.md §8/§10."""
+block-pool subsystem (``cache_mode="paged"``) and the n-gram draft
+proposer for speculative decoding (``spec_mode="ngram"``). See
+DESIGN.md §8/§10/§12."""
 from repro.serve.engine import (ServeEngine, make_serve_engine,  # noqa: F401
                                 prefill_bucket)
 from repro.serve.paged import (BlockPool, NoFreeBlocks,  # noqa: F401
                                PagedCacheManager, RadixPrefixCache)
-from repro.serve.scheduler import Request, SlotScheduler  # noqa: F401
+from repro.serve.scheduler import (Request, SlotScheduler,  # noqa: F401
+                                   normalize_stop)
+from repro.serve.spec import NgramProposer  # noqa: F401

@@ -36,6 +36,19 @@ the ``kernels/paged_attention`` block-table kernel on the Pallas
 backends. Cache memory then scales with live tokens instead of
 ``max_batch × max_len``, and the ring path stays available as the oracle
 the paged path must match token-for-token.
+
+``ServeConfig.spec_mode="ngram"`` (paged only) adds model-free
+**speculative decoding**: a pure-python prompt-lookup proposer
+(``serve/spec.py``) drafts up to ``spec_k`` tokens per slot from the
+request's own history, the engine verifies every slot's drafts in ONE
+k-query call through the same per-slot-offset ``paged_prefill`` path
+chunked prefill uses (commit-then-attend at Sq=spec_k+1), greedy
+acceptance keeps the longest draft prefix matching the model's argmax
+plus one free bonus token, and rejection is a host-side length
+truncation + ``PagedCacheManager.rollback`` of dead tail blocks — the
+append-only block discipline makes misprediction cost nothing but the
+padded verify call (DESIGN.md §12). Output tokens stay identical to
+``spec_mode="off"``.
 """
 from __future__ import annotations
 
@@ -54,6 +67,7 @@ from repro.models import params as PRM
 from repro.models import transformer as TF
 from repro.models.params import default_rules, init_params, specs_to_shardings
 from repro.serve.scheduler import SlotScheduler
+from repro.serve.spec import NgramProposer
 from repro.train.engine import _axes_to_shardings, make_shard_ctx, set_mesh
 
 
@@ -79,14 +93,25 @@ def prefill_bucket(n: int, lo: int = 8) -> int:
 def _make_sample_fn(temperature: float):
     """(B, V) logits -> (B,) int32 tokens. The temperature is fixed per
     engine, so the greedy/categorical choice is made here at build time —
-    the greedy hot path never pays the full-vocab Gumbel draw."""
+    the greedy hot path never pays the full-vocab Gumbel draw.
+
+    ``key`` is the engine's base PRNG key (constant across the run);
+    ``uids``/``steps`` are (B,) int32 per-slot request uids and
+    generation-step indices. Temperature>0 folds (uid, step) into the
+    key per slot, so request i's step-j draw is one fixed function of
+    the seed — reproducible across batch sizes, slot assignment,
+    admission order, and preemption/re-admission (the old
+    split-per-engine-step key made any scheduling difference change
+    every subsequent sample)."""
     if temperature > 0:
-        def sample_fn(logits, key):
-            return jax.random.categorical(
-                key, logits.astype(jnp.float32) / temperature,
-                axis=-1).astype(jnp.int32)
+        def sample_fn(logits, key, uids, steps):
+            keys = jax.vmap(lambda u, s: jax.random.fold_in(
+                jax.random.fold_in(key, u), s))(uids, steps)
+            return jax.vmap(lambda k, lg: jax.random.categorical(
+                k, lg.astype(jnp.float32) / temperature))(
+                keys, logits).astype(jnp.int32)
     else:
-        def sample_fn(logits, key):
+        def sample_fn(logits, key, uids, steps):
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     return sample_fn
 
@@ -116,6 +141,11 @@ class ServeEngine:
     jit_decode: Callable
     jit_sample: Callable
     donate: bool
+    # paged-only jitted steps (None under the ring cache): the k-query
+    # speculative verify (paged_prefill at Sq=spec_k+1, argmax returned)
+    # and the host->device per-slot length re-sync after a rejection
+    jit_verify: Optional[Callable] = None
+    jit_set_len: Optional[Callable] = None
     # paged mode (cache_mode="paged"); 0/unused under the ring cache
     num_blocks: int = 0              # physical KV blocks (excl. trash)
     blocks_per_slot: int = 0         # block-table width = cdiv(max_len, bs)
@@ -202,10 +232,40 @@ class ServeEngine:
                                    jnp.asarray(tables, jnp.int32),
                                    jnp.asarray(tokens, jnp.int32))
 
-    def sample(self, logits, key):
+    def verify_paged(self, params, cache, tables, tokens, pref_lens,
+                     prompt_lens, admit):
+        """Speculative verify: score ``tokens`` (max_batch, spec_k+1) —
+        per slot ``[current, draft_1..draft_k]`` right-padded — at
+        absolute positions ``pref_lens + [0, spec_k]`` through the paged
+        prefill path (commit-then-attend: draft KVs are written
+        optimistically, the accepted prefix keeps them for free).
+        Returns ``(argmax (B, spec_k+1) int32, new_cache)`` — the
+        model's greedy token at every verified position; the host
+        compares drafts against it to find the accepted prefix."""
+        with set_mesh(self.mesh), self.shard_ctx():
+            return self.jit_verify(params, cache,
+                                   jnp.asarray(tables, jnp.int32),
+                                   jnp.asarray(tokens, jnp.int32),
+                                   jnp.asarray(pref_lens, jnp.int32),
+                                   jnp.asarray(prompt_lens, jnp.int32),
+                                   jnp.asarray(admit, bool))
+
+    def set_lengths(self, cache, lens):
+        """Overwrite the paged cache's per-slot lengths with host truth
+        (``lens`` (max_batch,) int32, cache donated) — the lazy re-sync
+        after a speculative rejection left the device leaf over-counting
+        (see ``transformer.set_serve_lengths``)."""
+        with set_mesh(self.mesh), self.shard_ctx():
+            return self.jit_set_len(cache, jnp.asarray(lens, jnp.int32))
+
+    def sample(self, logits, key, uids, steps):
         """Sample next tokens (B,) from last-position logits (B, V) with
-        the engine's configured temperature (0 = greedy argmax)."""
-        return self.jit_sample(logits, key)
+        the engine's configured temperature (0 = greedy argmax).
+        ``uids``/``steps`` (B,) int32 make temperature>0 draws a pure
+        function of (seed, request uid, generation step)."""
+        return self.jit_sample(logits, key,
+                               jnp.asarray(uids, jnp.int32),
+                               jnp.asarray(steps, jnp.int32))
 
     # -- the serving loop ---------------------------------------------------
     def _empty_stats(self) -> Dict[str, float]:
@@ -227,7 +287,11 @@ class ServeEngine:
             # what admission/chunk prefills cost decoding neighbours
             "itl_p50_s": 0.0, "itl_p95_s": 0.0,
             "itl_wall_p50_s": 0.0, "itl_wall_p95_s": 0.0,
-            "prefill_stall_p50_s": 0.0, "prefill_stall_p95_s": 0.0}
+            "prefill_stall_p50_s": 0.0, "prefill_stall_p95_s": 0.0,
+            # decode-batch efficiency: tokens emitted per (slot × model
+            # pass). Exactly 1.0 for plain decode; speculative
+            # acceptance pushes it toward spec_k + 1
+            "tokens_per_model_pass": 0.0}
         stats.update({f"sched_{k}": 0 for k in
                       SlotScheduler(scfg.max_batch, scfg.max_len).counters})
         if scfg.cache_mode == "paged":
@@ -237,14 +301,28 @@ class ServeEngine:
                 "peak_blocks_in_use": 0, "num_blocks": self.num_blocks,
                 "peak_live_blocks": 0, "block_bytes": self.block_bytes,
                 "peak_cache_bytes": 0,
-                "ring_equiv_cache_bytes": self.ring_equiv_cache_bytes})
+                "ring_equiv_cache_bytes": self.ring_equiv_cache_bytes,
+                # speculative decoding (spec_mode="ngram"): drafts
+                # proposed / accepted (the free bonus token per verify
+                # is not counted as accepted) and verify-call count
+                "spec_drafted": 0, "spec_accepted": 0,
+                "spec_acceptance_rate": 0.0, "spec_verify_calls": 0})
         return stats
 
     def generate(self, params, prompts: Sequence[Sequence[int]], *,
-                 max_new_tokens: int = 32, eos_id: Optional[int] = None,
+                 max_new_tokens=32, eos_id: Optional[int] = None,
+                 stop: Optional[Sequence] = None,
                  seed: Optional[int] = None
                  ) -> Tuple[List[List[int]], Dict[str, float]]:
         """Continuously-batched generation for a list of prompts.
+
+        ``max_new_tokens`` is one int for every request or a per-request
+        sequence; ``stop`` is an optional per-request sequence of stop
+        specs (each ``None``, one token-id sequence, or a list of them —
+        see ``scheduler.normalize_stop``), matched host-side against the
+        generated tail (stop tokens are kept in the output, like EOS).
+        A request with a non-positive budget returns ``[]`` without
+        being scheduled.
 
         Submits every prompt to a :class:`SlotScheduler`, then loops:
         admit queued requests into free slots, run one bucketed prefill
@@ -275,16 +353,50 @@ class ServeEngine:
         the pool empty the newest occupied request is parked back to the
         radix cache and requeued (its re-prefill adopts the parked
         blocks, and greedy sampling makes the recompute exact).
+
+        With ``spec_mode="ngram"`` (paged, temperature 0) each decode
+        wave first asks the prompt-lookup proposer for up to ``spec_k``
+        draft tokens per running slot; any slot with drafts upgrades the
+        wave to ONE k-query verify call (``verify_paged``) whose argmax
+        row both verifies the drafts and supplies the next token — the
+        longest matching prefix plus one bonus token is recorded, so a
+        slot can advance up to ``spec_k + 1`` tokens per model pass
+        while misprediction degrades gracefully to exactly the plain
+        decode's one token. Waves where no slot drafts run the ordinary
+        Sq=1 decode call, so non-repetitive traffic never pays the
+        padded verify shape (DESIGN.md §12).
         """
         scfg = self.serve_cfg
         B = scfg.max_batch
         paged = scfg.cache_mode == "paged"
         preempt_on = paged and scfg.preemption == "recompute"
-        if max_new_tokens < 1:       # prefill always samples one token
+        if isinstance(max_new_tokens, (int, np.integer)):
+            budgets = [int(max_new_tokens)] * len(prompts)
+        else:
+            budgets = [int(m) for m in max_new_tokens]
+            if len(budgets) != len(prompts):
+                raise ValueError(f"{len(budgets)} max_new_tokens entries "
+                                 f"for {len(prompts)} prompts")
+        if stop is not None and len(stop) != len(prompts):
+            raise ValueError(f"{len(stop)} stop entries for "
+                             f"{len(prompts)} prompts")
+        if not any(m >= 1 for m in budgets):  # prefill samples one token
             return [[] for _ in prompts], self._empty_stats()
         sched = SlotScheduler(B, scfg.max_len, rollover=scfg.rollover)
-        uids = [sched.submit(p, max_new_tokens=max_new_tokens,
-                             eos_id=eos_id) for p in prompts]
+        uids: List[Optional[int]] = [None] * len(prompts)
+        for i, p in enumerate(prompts):
+            if budgets[i] >= 1:
+                uids[i] = sched.submit(
+                    p, max_new_tokens=budgets[i], eos_id=eos_id,
+                    stop=None if stop is None else stop[i])
+        # speculative decoding is greedy-only: acceptance compares drafts
+        # against argmax, so temperature>0 engines fall back to plain
+        # decode (the reproducible per-(uid, step) sampler keeps that
+        # path deterministic too)
+        spec_on = (paged and scfg.spec_mode == "ngram"
+                   and scfg.temperature == 0)
+        proposer = (NgramProposer(scfg.spec_k, scfg.spec_ngram,
+                                  scfg.spec_min_ngram) if spec_on else None)
         mgr = fits = None
         if paged:
             from repro.serve.paged import NoFreeBlocks, PagedCacheManager
@@ -302,6 +414,11 @@ class ServeEngine:
         key = jax.random.PRNGKey(scfg.seed if seed is None else seed)
         n_new = n_prefill_tok = n_steps = n_prefills = n_chunks = 0
         n_decoded = 0                         # tokens produced by decode steps
+        n_slot_passes = 0                     # live (slot, decode wave) pairs
+        spec_drafted = spec_accepted = n_verify = 0
+        len_dirty = False       # device length leaf over-counts after a
+        # partial spec rejection; re-synced lazily before the next plain
+        # decode (the only step that reads it)
         prefill_s = decode_s = 0.0
         ttft: Dict[int, float] = {}           # uid -> first-token latency
         itl: List[float] = []                 # decode-only inter-token deltas
@@ -368,7 +485,6 @@ class ServeEngine:
                     toks_l[slot] = r.prefilled + c
                     pref_l[slot] = r.prefilled
                     mask[slot] = True
-                key, k1 = jax.random.split(key)
                 if paged:
                     logits, cache = self.prefill_paged(
                         params, cache, mgr.tables, toks, pref_l, toks_l,
@@ -378,7 +494,13 @@ class ServeEngine:
                                                  toks_l, mask)
                 # sample here too: a max_new_tokens=1 run finishes at
                 # prefill and never reaches the decode-branch sample
-                tok = np.asarray(self.sample(logits[:, 0], k1))
+                uids_a = np.zeros((B,), np.int32)
+                steps_a = np.zeros((B,), np.int32)
+                for slot, r in prefilling:
+                    uids_a[slot] = r.uid
+                    steps_a[slot] = len(r.generated)
+                tok = np.asarray(self.sample(logits[:, 0], key,
+                                             uids_a, steps_a))
                 now = time.perf_counter()
                 dur = now - t_pf
                 for slot, r in prefilling:
@@ -404,15 +526,31 @@ class ServeEngine:
             running = sched.running
             if not running:
                 continue
+            drafts: Dict[int, List[int]] = {}
+            if spec_on:
+                for slot, r in running:
+                    # clamp so optimistic draft KVs stay inside the
+                    # slot's worst-case block reservation (positions
+                    # through prompt+max_new-2, i.e. remaining_new - 1
+                    # drafts) and inside the table/RoPE range (max_len)
+                    cap = min(scfg.spec_k, r.remaining_new - 1,
+                              scfg.max_len - r.total_len)
+                    if cap >= 1:
+                        d = proposer.propose(r.context, cap)
+                        if d:
+                            drafts[slot] = d
             dead: set = set()                 # slots preempted this step
             if paged:
                 pf_set = {s for s, _ in sched.prefilling}
                 for slot, r in running:
-                    # the KV write for this step lands at absolute
-                    # position total_len - 1 (the token being consumed)
+                    # KV writes this step: absolute position total_len-1
+                    # (the token being consumed) through total_len-1+k
+                    # (the last draft, committed optimistically)
+                    last = r.total_len - 1 + len(drafts.get(slot, ()))
                     while slot not in dead:
                         try:
-                            mgr.ensure_block(slot, r.total_len - 1)
+                            for wp in range(r.total_len - 1, last + 1):
+                                mgr.ensure_block(slot, wp)
                             break
                         except NoFreeBlocks:
                             if not preempt_on:
@@ -427,34 +565,123 @@ class ServeEngine:
                             _preempt(vslot, vr, pf_set)
                             dead.add(vslot)
                 peak_live_blocks = max(peak_live_blocks, mgr.live_blocks)
+            drafts = {s: d for s, d in drafts.items() if s not in dead}
             t_dec = time.perf_counter()
-            key, k1 = jax.random.split(key)
-            if paged:
-                logits, cache = self.decode_paged(params, cache,
-                                                  mgr.tables, cur[:, None])
+            if drafts:
+                # -- speculative wave: one k-query verify call ----------
+                S_v = scfg.spec_k + 1         # static shape: one trace
+                toks = np.zeros((B, S_v), np.int32)
+                pref = np.zeros((B,), np.int32)
+                lens = np.ones((B,), np.int32)
+                mask = np.zeros((B,), bool)
+                for slot, r in running:
+                    if slot in dead:
+                        continue
+                    d = drafts.get(slot, ())
+                    L = r.total_len - 1       # KV-resident tokens
+                    toks[slot, 0] = cur[slot]
+                    toks[slot, 1:1 + len(d)] = d
+                    pref[slot] = L
+                    lens[slot] = L + 1 + len(d)
+                    mask[slot] = True
+                arg, cache = self.verify_paged(params, cache, mgr.tables,
+                                               toks, pref, lens, mask)
+                arg = np.asarray(arg)
+                now = time.perf_counter()
+                for slot, r in running:
+                    if slot in dead:
+                        continue
+                    d = drafts.get(slot, ())
+                    n_in = 1 + len(d)
+                    a = 0                     # accepted draft prefix
+                    while a < len(d) and d[a] == int(arg[slot, a]):
+                        a += 1
+                    # emit the a verified drafts (== the model's argmax
+                    # at their positions) plus the bonus token at the
+                    # first mismatch — exactly what a + 1 sequential
+                    # greedy decode steps would have produced
+                    delta = now - last_t[slot]
+                    stalled = stall.pop(slot, 0.0)
+                    done, m = False, 0
+                    for j in range(a + 1):
+                        t = int(arg[slot, j])
+                        done = sched.record(slot, t)
+                        cur[slot] = t
+                        m += 1
+                        # the m tokens land together: the wave's wall
+                        # gap belongs to the first, the rest are free
+                        itl_wall.append(delta if j == 0 else 0.0)
+                        itl.append(max(delta - stalled, 0.0)
+                                   if j == 0 else 0.0)
+                        if done:
+                            break
+                    if stalled:
+                        stalls.append(stalled)
+                    last_t[slot] = now
+                    spec_drafted += len(d)
+                    spec_accepted += min(a, m)
+                    n_new += m
+                    n_decoded += m
+                    n_slot_passes += 1
+                    if done:
+                        _finish(slot, r, now)  # release frees dead tail
+                    else:
+                        # rejection cleanup: free whole blocks past the
+                        # kept tokens; stale cells inside kept blocks
+                        # are masked by kv_len until overwritten
+                        mgr.rollback(slot, r.total_len - 1)
+                        if m != n_in:
+                            len_dirty = True
+                n_steps += 1
+                n_verify += 1
             else:
-                logits, cache = self.decode(params, cache, cur[:, None])
-            tok = np.asarray(self.sample(logits[:, 0], k1))
-            now = time.perf_counter()
-            n_live = 0
-            for slot, r in running:
-                if slot in dead:              # preempted mid-step: its
-                    continue                  # table row decoded to trash
-                done = sched.record(slot, tok[slot])
-                cur[slot] = tok[slot]
-                delta = now - last_t[slot]
-                stalled = stall.pop(slot, 0.0)
-                itl_wall.append(delta)
-                itl.append(max(delta - stalled, 0.0))
-                if stalled:
-                    stalls.append(stalled)
-                last_t[slot] = now
-                n_live += 1
-                if done:
-                    _finish(slot, r, now)
-            n_new += n_live
-            n_decoded += n_live
-            n_steps += 1
+                # -- plain wave: ordinary one-token decode --------------
+                if paged and len_dirty:
+                    # the only step that reads the device length leaf;
+                    # restore host truth (prefilling slots keep their
+                    # chunk cursor, idle slots write to trash anyway)
+                    lens = np.zeros((B,), np.int32)
+                    pf_now = {s for s, _ in sched.prefilling}
+                    for slot, r in sched.occupied:
+                        lens[slot] = (r.prefilled if slot in pf_now
+                                      else r.total_len - 1)
+                    cache = self.set_lengths(cache, lens)
+                    len_dirty = False
+                if paged:
+                    logits, cache = self.decode_paged(
+                        params, cache, mgr.tables, cur[:, None])
+                else:
+                    logits, cache = self.decode(params, cache,
+                                                cur[:, None])
+                uids_a = np.zeros((B,), np.int32)
+                steps_a = np.zeros((B,), np.int32)
+                for slot, r in running:
+                    if slot not in dead:
+                        uids_a[slot] = r.uid
+                        steps_a[slot] = len(r.generated)
+                tok = np.asarray(self.sample(logits[:, 0], key,
+                                             uids_a, steps_a))
+                now = time.perf_counter()
+                n_live = 0
+                for slot, r in running:
+                    if slot in dead:          # preempted mid-step: its
+                        continue              # table row decoded to trash
+                    done = sched.record(slot, tok[slot])
+                    cur[slot] = tok[slot]
+                    delta = now - last_t[slot]
+                    stalled = stall.pop(slot, 0.0)
+                    itl_wall.append(delta)
+                    itl.append(max(delta - stalled, 0.0))
+                    if stalled:
+                        stalls.append(stalled)
+                    last_t[slot] = now
+                    n_live += 1
+                    if done:
+                        _finish(slot, r, now)
+                n_new += n_live
+                n_decoded += n_live
+                n_slot_passes += n_live
+                n_steps += 1
             decode_s += now - t_dec
         dt = time.perf_counter() - t0
 
@@ -480,7 +707,8 @@ class ServeEngine:
             "itl_wall_p50_s": pct(itl_wall, 50),
             "itl_wall_p95_s": pct(itl_wall, 95),
             "prefill_stall_p50_s": pct(stalls, 50),
-            "prefill_stall_p95_s": pct(stalls, 95)})
+            "prefill_stall_p95_s": pct(stalls, 95),
+            "tokens_per_model_pass": n_decoded / max(n_slot_passes, 1)})
         stats.update({f"sched_{k}": v for k, v in sched.counters.items()})
         if paged:
             stats.update(mgr.stats())
@@ -488,7 +716,12 @@ class ServeEngine:
             stats["block_bytes"] = self.block_bytes
             stats["peak_cache_bytes"] = mgr.peak_in_use * self.block_bytes
             stats["ring_equiv_cache_bytes"] = self.ring_equiv_cache_bytes
-        return [sched.results[u] for u in uids], stats
+            stats["spec_drafted"] = spec_drafted
+            stats["spec_accepted"] = spec_accepted
+            stats["spec_acceptance_rate"] = (
+                spec_accepted / max(spec_drafted, 1))
+            stats["spec_verify_calls"] = n_verify
+        return [[] if u is None else sched.results[u] for u in uids], stats
 
 
 def make_serve_engine(model, serve_cfg: ServeConfig, mesh: Mesh, *,
@@ -552,6 +785,22 @@ def make_serve_engine(model, serve_cfg: ServeConfig, mesh: Mesh, *,
             "prefill_chunk_tokens / preemption are paged-cache features: "
             "the ring cache has no block table to chunk against or park "
             "into; set cache_mode='paged'")
+    if serve_cfg.spec_mode not in ("off", "ngram"):
+        raise ValueError(f"spec_mode {serve_cfg.spec_mode!r} not in "
+                         "('off', 'ngram')")
+    if serve_cfg.spec_mode == "ngram":
+        if not paged:
+            raise NotImplementedError(
+                "spec_mode='ngram' verifies drafts through the paged "
+                "block-table prefill path and rolls rejected KVs back "
+                "by truncating the block table; the ring cache has "
+                "neither — set cache_mode='paged'")
+        if serve_cfg.spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {serve_cfg.spec_k}")
+        if not 1 <= serve_cfg.spec_min_ngram <= serve_cfg.spec_ngram:
+            raise ValueError(
+                f"need 1 <= spec_min_ngram <= spec_ngram, got "
+                f"{serve_cfg.spec_min_ngram}..{serve_cfg.spec_ngram}")
     if paged:
         if serve_cfg.rollover:
             raise NotImplementedError(
@@ -623,6 +872,23 @@ def make_serve_engine(model, serve_cfg: ServeConfig, mesh: Mesh, *,
         return TF.paged_decode_step(p, st, tables, toks, cfg, policy,
                                     parallel, rope_cache=rc)
 
+    def paged_verify_fn(p, st, tables, toks, pref_lens, lens, admit):
+        # the speculative verify IS the chunked-prefill call at
+        # Sq=spec_k+1 — commit-then-attend writes the draft KVs first,
+        # the per-slot q_off kernel attends over resident + drafts —
+        # except every position's logits come back (last_only=False)
+        # reduced to their argmax, which is all greedy acceptance needs
+        # (and a (B, S) int32 ship instead of (B, S, V) fp32)
+        if rope_cos is None:
+            rc = None
+        else:
+            pos = pref_lens[:, None] + jnp.arange(toks.shape[1])[None, :]
+            rc = (rope_cos[pos], rope_sin[pos])
+        logits, st2 = TF.paged_prefill(p, st, tables, toks, pref_lens,
+                                       lens, admit, cfg, policy, parallel,
+                                       last_only=False, rope_cache=rc)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), st2
+
     # per-mode picks: (prefill fn + its replicated-operand count, decode
     # fn + count, fresh-cache initializer); the jit wiring below is shared
     if paged:
@@ -648,6 +914,18 @@ def make_serve_engine(model, serve_cfg: ServeConfig, mesh: Mesh, *,
                          + (repl,) * n_dc,
                          out_shardings=(None, cache_shard),
                          donate_argnums=dn)
+    if paged:
+        jit_verify = jax.jit(paged_verify_fn,
+                             in_shardings=(param_shard, cache_shard)
+                             + (repl,) * 5,
+                             out_shardings=(None, cache_shard),
+                             donate_argnums=dn)
+        jit_set_len = jax.jit(TF.set_serve_lengths,
+                              in_shardings=(cache_shard, repl),
+                              out_shardings=cache_shard,
+                              donate_argnums=(0,) if donate else ())
+    else:
+        jit_verify = jit_set_len = None
     jit_init_cache = jax.jit(init_fn, out_shardings=cache_shard)
     jit_sample = jax.jit(_make_sample_fn(serve_cfg.temperature))
 
@@ -668,6 +946,7 @@ def make_serve_engine(model, serve_cfg: ServeConfig, mesh: Mesh, *,
                        jit_init_cache=jit_init_cache,
                        jit_prefill=jit_prefill, jit_decode=jit_decode,
                        jit_sample=jit_sample, donate=donate,
+                       jit_verify=jit_verify, jit_set_len=jit_set_len,
                        num_blocks=num_blocks,
                        blocks_per_slot=blocks_per_slot,
                        block_bytes=block_bytes,

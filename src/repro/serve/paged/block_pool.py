@@ -284,6 +284,37 @@ class PagedCacheManager:
         self._reserved[slot] = max(self._reserved[slot] - 1, 0)
         self.peak_in_use = max(self.peak_in_use, self.pool.in_use)
 
+    def rollback(self, slot: int, tokens_kept: int) -> int:
+        """Truncate ``slot`` to its first ``tokens_kept`` cache cells and
+        free the now-dead tail blocks; returns how many blocks freed.
+
+        Speculative verification writes draft KVs optimistically at
+        positions ``resident..resident+k``; on rejection the accepted
+        prefix keeps its blocks untouched (append-only discipline) and
+        only whole blocks past ``ceil(tokens_kept / block_size)`` return
+        to the pool. Stale cells inside the kept tail block are never
+        attended (``kv_len`` masks them) and are overwritten before the
+        slot's length grows past them. Radix-adopted prefix blocks sit
+        below the kept range, and even an explicit rollback over one
+        only drops the slot's reference — the cache's own refcount keeps
+        shared blocks alive. With preemption off the freed blocks return
+        to this slot's worst-case reservation so admission accounting
+        stays exact.
+        """
+        keep = math.ceil(tokens_kept / self.block_size)
+        blocks = self._slot_blocks[slot]
+        assert blocks and tokens_kept >= 1, (slot, tokens_kept)
+        n_freed = len(blocks) - keep
+        if n_freed <= 0:
+            return 0
+        for j in range(keep, len(blocks)):
+            self.tables[slot, j] = self.trash
+            self.pool.release(blocks[j])
+        del blocks[keep:]
+        if not self.preemption:
+            self._reserved[slot] += n_freed
+        return n_freed
+
     def release(self, slot: int, tokens_written: Sequence[int]) -> None:
         """Drop ``slot``'s references: full blocks are parked in the
         prefix cache keyed by the tokens actually written; the partial

@@ -38,6 +38,43 @@ from collections import deque
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 
+def normalize_stop(stop) -> List[List[int]]:
+    """Normalize one request's stop spec into a list of stop sequences.
+
+    Accepts ``None`` (no stop sequences), one flat token-id sequence, or
+    a sequence of sequences. Matching is host-side and exact: a request
+    finishes when its ``generated`` tail equals any stop sequence
+    (the stop tokens are kept in the output, like EOS).
+
+    >>> normalize_stop(None)
+    []
+    >>> normalize_stop([5, 6])
+    [[5, 6]]
+    >>> normalize_stop([[5], [6, 7]])
+    [[5], [6, 7]]
+    >>> normalize_stop([])
+    []
+    >>> normalize_stop([[]])
+    Traceback (most recent call last):
+        ...
+    ValueError: empty stop sequence
+    """
+    if stop is None:
+        return []
+    stop = list(stop)
+    if not stop:
+        return []
+    if not isinstance(stop[0], (list, tuple)):
+        stop = [stop]
+    out = []
+    for s in stop:
+        s = [int(t) for t in s]
+        if not s:
+            raise ValueError("empty stop sequence")
+        out.append(s)
+    return out
+
+
 @dataclasses.dataclass
 class Request:
     """One generation request tracked by the scheduler.
@@ -60,6 +97,7 @@ class Request:
     prompt: List[int]
     max_new_tokens: int
     eos_id: Optional[int] = None
+    stop: List[List[int]] = dataclasses.field(default_factory=list)
     generated: List[int] = dataclasses.field(default_factory=list)
     prefilled: int = 0
 
@@ -111,20 +149,26 @@ class SlotScheduler:
         # ``counters`` (the engine folds them into generate()'s stats row)
         self.counters: Dict[str, int] = {
             "admitted": 0, "skipped": 0, "evicted_budget": 0,
-            "evicted_eos": 0, "evicted_cache": 0, "preempted": 0,
-            "peak_queue_depth": 0}
+            "evicted_eos": 0, "evicted_stop": 0, "evicted_cache": 0,
+            "preempted": 0, "peak_queue_depth": 0}
 
     # -- submission / admission --------------------------------------------
     def submit(self, prompt: Sequence[int], *, max_new_tokens: int = 32,
-               eos_id: Optional[int] = None) -> int:
-        """Queue a request; returns its uid. Prompts must fit the cache."""
+               eos_id: Optional[int] = None, stop=None) -> int:
+        """Queue a request; returns its uid. Prompts must fit the cache.
+
+        ``max_new_tokens`` and ``stop`` are per-request: workloads can
+        mix budgets and stop sequences in one batch (``stop`` takes
+        anything :func:`normalize_stop` accepts).
+        """
         prompt = list(prompt)
         if not prompt:
             raise ValueError("empty prompt")
         if len(prompt) > self.max_len:
             raise ValueError(f"prompt len {len(prompt)} > max_len "
                              f"{self.max_len}; truncate client-side")
-        req = Request(self._next_uid, prompt, max_new_tokens, eos_id)
+        req = Request(self._next_uid, prompt, max_new_tokens, eos_id,
+                      normalize_stop(stop))
         self._next_uid += 1
         self._queue.append(req)
         self.counters["peak_queue_depth"] = max(
@@ -155,7 +199,7 @@ class SlotScheduler:
         >>> s = SlotScheduler(max_batch=1, max_len=64)
         >>> big = s.submit([1] * 40); small = s.submit([2, 3])
         >>> s.admit(fits=lambda r: len(r.prompt) <= 8)  # big can't fit...
-        [(0, Request(uid=1, prompt=[2, 3], max_new_tokens=32, eos_id=None, generated=[], prefilled=0))]
+        [(0, Request(uid=1, prompt=[2, 3], max_new_tokens=32, eos_id=None, stop=[], generated=[], prefilled=0))]
         >>> s.pending, s.counters["skipped"]    # ...small admitted past it
         (1, 1)
         """
@@ -201,6 +245,8 @@ class SlotScheduler:
             done, reason = True, "evicted_budget"
         elif req.eos_id is not None and int(token) == req.eos_id:
             done, reason = True, "evicted_eos"
+        elif req.stop and any(req.generated[-len(s):] == s for s in req.stop):
+            done, reason = True, "evicted_stop"
         elif not self.rollover and req.total_len > self.max_len:
             done, reason = True, "evicted_cache"
         else:
