@@ -9,6 +9,12 @@ Donation lets XLA alias the params/opt-state buffers between steps
 (in-place update instead of allocate+copy); the no-donation rows quantify
 what that saves. N fake host devices share the same physical cores, so
 the N-device rows measure partitioning overhead, not real scaling.
+
+Plus the precision-policy contrast (quant_contrast rows): bf16 vs int8
+SwitchBack vs real fp8 vs fp8_mixed (dynamic block-level bf16 fallback,
+DESIGN.md §13) through the identical engine — each row carries its loss
+curve, the paper's loss-spike-detector firings, and the final-loss delta
+vs bf16; the run fails if fp8_mixed spikes or departs bf16 by > 0.5%.
 """
 from __future__ import annotations
 
@@ -38,12 +44,13 @@ from repro.train import make_engine
 
 def bench_row(arch: str, mesh, *, donate: bool, steps: int, batch: int,
               seq: int, warmup: int = 3, quant_mode: str = "bf16",
-              kernel_backend: str = "xla",
+              kernel_backend: str = "xla", fp8_block: int = 32,
               attn_impl: str = "flash_scan") -> dict:
     cfg = get_reduced_config(arch)
     tc = TrainConfig(learning_rate=1e-3, warmup_steps=2, total_steps=10_000,
                      loss_scaler="none", quant_mode=quant_mode,
-                     kernel_backend=kernel_backend)
+                     kernel_backend=kernel_backend,
+                     fp8_block_rows=fp8_block, fp8_block_cols=fp8_block)
     par = ParallelConfig(mesh_shape=tuple(mesh.devices.shape),
                          mesh_axes=tuple(mesh.axis_names), remat="block",
                          attn_impl=attn_impl)
@@ -57,9 +64,11 @@ def bench_row(arch: str, mesh, *, donate: bool, steps: int, batch: int,
     for i in range(warmup):
         state, m = engine.step(state, batches[i % len(batches)])
     jax.block_until_ready(state)
+    metrics = []                     # converted after the clock stops
     t0 = time.perf_counter()
     for i in range(steps):
         state, m = engine.step(state, batches[i % len(batches)])
+        metrics.append(m["loss"])
     jax.block_until_ready(state)
     dt = time.perf_counter() - t0
     return {"bench": "train_step", "arch": arch, "devices": mesh.size,
@@ -68,6 +77,7 @@ def bench_row(arch: str, mesh, *, donate: bool, steps: int, batch: int,
             "donate": donate, "batch": batch, "seq": seq, "steps": steps,
             "quant_mode": quant_mode, "kernel_backend": kernel_backend,
             "steps_per_s": steps / dt, "wall_s": dt,
+            "losses": [float(l) for l in metrics],
             "final_loss": float(m["loss"])}
 
 
@@ -109,6 +119,37 @@ def backend_contrast_row(arch: str, *, batch: int = 8, seq: int = 512,
             "modeled_attn_speedup": per_layer["xla"] / per_layer["pallas"]}
 
 
+def quant_contrast_rows(arch: str, *, steps: int, batch: int,
+                        seq: int) -> list:
+    """The precision-policy contrast on the 1-device mesh: bf16 vs the int8
+    SwitchBack kernels vs real fp8 vs fp8 + dynamic block fallback, same
+    data stream — steps/s, final loss vs bf16, and the paper's loss-spike
+    detector over the curve (thresholds tightened for a short run)."""
+    from repro.stability import LossSpikeDetector
+    mesh = make_test_mesh((1, 1))
+    rows = []
+    print(f"{'quant_mode':>12} | {'steps/s':>8} {'final_loss':>10} "
+          f"{'vs bf16':>8} {'spikes':>6}")
+    base = None
+    for mode in ("bf16", "int8", "fp8", "fp8_mixed"):
+        row = bench_row(arch, mesh, donate=True, steps=steps, batch=batch,
+                        seq=seq, quant_mode=mode)
+        row["kind"] = "quant_contrast"
+        det = LossSpikeDetector(ignore_first=0, min_history=5)
+        for i, l in enumerate(row["losses"]):
+            det.record(i, l)
+        row["spike_steps"] = det.spike_steps()
+        if mode == "bf16":
+            base = row["final_loss"]
+        row["final_loss_vs_bf16"] = abs(row["final_loss"] - base) / abs(base)
+        rows.append(row)
+        print(f"{mode:>12} | {row['steps_per_s']:8.2f} "
+              f"{row['final_loss']:10.4f} "
+              f"{row['final_loss_vs_bf16']:7.2%} "
+              f"{len(row['spike_steps']):>6}")
+    return rows
+
+
 def run(out_json: str | None = None, steps: int = 30, batch: int = 8,
         seq: int = 64, quant_mode: str = "bf16",
         kernel_backend: str = "xla") -> list:
@@ -123,9 +164,20 @@ def run(out_json: str | None = None, steps: int = 30, batch: int = 8,
             row = bench_row("smollm-360m", mesh, donate=donate, steps=steps,
                             batch=batch, seq=seq, quant_mode=quant_mode,
                             kernel_backend=kernel_backend)
+            del row["losses"]          # curves only matter for the contrast
             rows.append(row)
             print(f"{row['devices']:>8} {str(donate):>7} | "
                   f"{row['steps_per_s']:8.2f} {row['wall_s']:7.2f}")
+    qrows = quant_contrast_rows("smollm-360m", steps=steps, batch=batch,
+                                seq=seq)
+    rows.extend(qrows)
+    mixed = next(r for r in qrows if r["quant_mode"] == "fp8_mixed")
+    stable = (mixed["final_loss_vs_bf16"] <= 5e-3
+              and not mixed["spike_steps"])
+    print(f"CLAIM fp8_mixed trains like bf16 (final loss within 0.5%, zero "
+          f"loss-spike firings): {'PASS' if stable else 'FAIL'} "
+          f"({mixed['final_loss_vs_bf16']:.2%}, "
+          f"{len(mixed['spike_steps'])} spikes)")
     contrast = backend_contrast_row("smollm-360m", batch=batch,
                                     seq=max(seq, 4096 // batch))
     rows.append(contrast)
@@ -148,6 +200,8 @@ def run(out_json: str | None = None, steps: int = 30, batch: int = 8,
     if sp < 1.0:
         raise SystemExit(
             "pallas attention slower than xla in the train step")
+    if not stable:
+        raise SystemExit("fp8_mixed training curve departed from bf16")
     return rows
 
 

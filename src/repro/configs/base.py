@@ -166,9 +166,14 @@ class TrainConfig:
     beta2: float = 0.95
     grad_clip_norm: float = 0.0      # 0 = off (paper default: no grad clip)
     loss_scaler: str = "none"        # none|fixed_tensor|dynamic
-    quant_mode: str = "bf16"         # precision policy for all linears
-    kernel_backend: str = "xla"      # xla|pallas|pallas_interpret — int8
-    # matmul implementation for quantized modes (QuantPolicy.backend)
+    quant_mode: str = "bf16"         # precision policy for all linears:
+    # bf16 | int8[_*] | fp8 | fp8_mixed | fp8_sim... (core/precision.MODES)
+    kernel_backend: str = "xla"      # xla|pallas|pallas_interpret —
+    # quantized-matmul implementation (QuantPolicy.backend)
+    fp8_block_rows: int = 128        # fp8_mixed: blockwise-quant tile rows
+    fp8_block_cols: int = 128        # fp8_mixed: blockwise-quant tile cols
+    fp8_fallback_ratio: float = 8.0  # fp8_mixed: tile absmax > ratio ×
+    # median(tile absmaxes) routes that matmul tile through bf16
     seed: int = 0
     global_batch: int = 256
     seq_len: int = 4096

@@ -19,19 +19,23 @@ Array = jax.Array
 
 MODES = (
     "bf16", "fp16", "fp32",
-    "int8_switchback", "int8_switchback_m", "int8_switchback_q", "int8_llm",
-    "fp8_sim", "fp8_switchback",
+    "int8", "int8_switchback", "int8_switchback_m", "int8_switchback_q",
+    "int8_llm",
+    "fp8_sim", "fp8_switchback", "fp8", "fp8_mixed",
 )
 
 BACKENDS = SB.BACKENDS   # ("xla", "pallas", "pallas_interpret")
 
 _SB_VARIANT = {
+    "int8": "switchback",            # alias: the knob spans int8|fp8|mixed
     "int8_switchback": "switchback",
     "int8_switchback_m": "switchback_m",
     "int8_switchback_q": "switchback_q",
     "int8_llm": "llm_int8",
     "fp8_sim": "fp8_sim",
     "fp8_switchback": "fp8_switchback",
+    "fp8": "fp8",                    # real fp8 kernels (E4M3 fwd/E5M2 bwd)
+    "fp8_mixed": "fp8_mixed",        # fp8 + dynamic block-level bf16 fallback
 }
 
 
@@ -65,6 +69,12 @@ class QuantPolicy:
     fwd_fmt: str = "e4m3"
     bwd_fmt: str = "e5m2"
     backend: str = "xla"
+    # fp8_mixed only: blockwise-quantization tile over X/Ẏ (one scale + one
+    # fallback bit per tile) and the absmax-vs-median ratio above which a
+    # tile's matmul runs in bf16 (dynamic block-level fallback, DESIGN.md §13)
+    fp8_block_rows: int = 128
+    fp8_block_cols: int = 128
+    fp8_fallback_ratio: float = 8.0
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -85,8 +95,13 @@ class QuantPolicy:
     @classmethod
     def from_train_config(cls, tc) -> "QuantPolicy":
         """The single way launchers derive the policy from a TrainConfig:
-        ``quant_mode`` + ``kernel_backend`` stay in sync by construction."""
-        return cls(tc.quant_mode, backend=getattr(tc, "kernel_backend", "xla"))
+        ``quant_mode`` + ``kernel_backend`` + the fp8 block knobs stay in
+        sync by construction."""
+        return cls(
+            tc.quant_mode, backend=getattr(tc, "kernel_backend", "xla"),
+            fp8_block_rows=getattr(tc, "fp8_block_rows", 128),
+            fp8_block_cols=getattr(tc, "fp8_block_cols", 128),
+            fp8_fallback_ratio=getattr(tc, "fp8_fallback_ratio", 8.0))
 
 
 BF16 = QuantPolicy("bf16")
@@ -108,7 +123,10 @@ def quant_linear(x: Array, w: Array, b: Optional[Array] = None, *,
             xq, w.astype(jnp.float32), b,
             variant=_SB_VARIANT[policy.mode],
             fwd_fmt=policy.fwd_fmt, bwd_fmt=policy.bwd_fmt,
-            backend=policy.backend)
+            backend=policy.backend,
+            block_rows=policy.fp8_block_rows,
+            block_cols=policy.fp8_block_cols,
+            fallback_ratio=policy.fp8_fallback_ratio)
     cd = (jnp.float32 if policy.mode == "fp32" else policy.compute_dtype)
     y = jax.lax.dot_general(
         x.astype(cd), w.astype(cd),

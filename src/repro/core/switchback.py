@@ -28,6 +28,16 @@ Variants (all released by the paper, all implemented here):
                    unless zero-init layer-scale is used, §2.3).
 * ``fp8_switchback``: SwitchBack with fp8 quantizers (row-wise E4M3 inputs,
                    tensor-wise E4M3 weights, row-wise E5M2 grads, bf16 wgrad).
+* ``fp8``         real fp8 execution (not simulation): row-wise E4M3 X,
+                   tensor-wise E4M3 W, row-wise E5M2 Ẏ dgrad, bf16 wgrad —
+                   all through the kernels/fp8_matmul tiled kernels with
+                   Scalify-style explicit scales (DESIGN.md §13).
+* ``fp8_mixed``   fp8 with dynamic block-level bf16 fallback: X and Ẏ are
+                   quantized in (block_rows × block_cols) tiles; tiles whose
+                   absmax exceeds ``fallback_ratio`` × the median run the
+                   matmul tile in bf16 against the dequantized weight
+                   ("Accurate INT8 Training Through Dynamic Block-Level
+                   Fallback" applied to fp8).
 
 Note on the GPU→TPU adaptation: the paper fuses a transpose into the weight
 quantizer (``tensor-wise_quantize_transpose``) because cuBLAS int8 only
@@ -47,8 +57,9 @@ matmuls through the hand-tiled Pallas kernels in ``kernels/switchback``:
 
 The 16-bit weight-grad matmul always stays on ``dot_general``: it is the
 paper's "switch back" and XLA already emits an optimal bf16 MXU matmul for
-it.  The fp8 variants are simulation-only (no fp8 Pallas kernels) and
-ignore the backend knob.
+it.  The ``fp8_sim``/``fp8_switchback`` variants are simulation-only (no
+kernels) and ignore the backend knob; ``fp8``/``fp8_mixed`` dispatch on it
+through kernels/fp8_matmul exactly as the int8 variants do.
 """
 from __future__ import annotations
 
@@ -59,18 +70,23 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quantization as Q
+from repro.kernels.fp8_matmul import ops as F8OPS
 from repro.kernels.switchback import ops as KOPS
 
 Array = jax.Array
 Variant = Literal[
     "switchback", "switchback_m", "switchback_q", "llm_int8",
-    "fp8_sim", "fp8_switchback",
+    "fp8_sim", "fp8_switchback", "fp8", "fp8_mixed",
 ]
 
 VARIANTS: Tuple[str, ...] = (
     "switchback", "switchback_m", "switchback_q", "llm_int8",
-    "fp8_sim", "fp8_switchback",
+    "fp8_sim", "fp8_switchback", "fp8", "fp8_mixed",
 )
+
+# simulation-only fp8 variants: quantize-dequantize in the model graph,
+# backend knob ignored (kernels would buy nothing — the dots are bf16/f32)
+SIM_FP8_VARIANTS: Tuple[str, ...] = ("fp8_sim", "fp8_switchback")
 
 BACKENDS: Tuple[str, ...] = KOPS.BACKENDS
 
@@ -201,16 +217,24 @@ def _fwd_fp8_rowwise_tensorwise(x: Array, w: Array, out_dtype, fwd_fmt: str):
 def make_switchback_matmul(variant: str = "switchback",
                            fwd_fmt: str = "e4m3",
                            bwd_fmt: str = "e5m2",
-                           backend: str = "xla"):
+                           backend: str = "xla",
+                           block_rows: int = 128,
+                           block_cols: int = 128,
+                           fallback_ratio: float = 8.0):
     """Build the custom-VJP 2-D matmul ``f(x2d, w) -> y2d`` for a variant.
 
     x2d: (b, n) activations (b = flattened batch*seq), w: (n, m) weights.
     Gradients: dx in x.dtype, dw in f32 (master-weight precision).
 
-    ``backend`` routes the int8 forward/dgrad matmuls: ``xla`` (plain
-    ``dot_general``), ``pallas`` (the fused TPU kernels) or
+    ``backend`` routes the int8 and real-fp8 forward/dgrad matmuls: ``xla``
+    (the pure-jnp oracles), ``pallas`` (the fused TPU kernels) or
     ``pallas_interpret`` (same kernels, interpreter — CPU-testable). The
-    16-bit weight-grad and the fp8 variants always use ``dot_general``.
+    16-bit weight-grad and the simulated fp8 variants always use
+    ``dot_general``.
+
+    ``block_rows``/``block_cols``/``fallback_ratio`` apply to ``fp8_mixed``
+    only: the blockwise-quantization tile shape over X/Ẏ and the
+    outlier-vs-median absmax ratio above which a tile falls back to bf16.
     """
     if variant not in VARIANTS:
         raise ValueError(f"unknown SwitchBack variant {variant!r}; "
@@ -258,6 +282,21 @@ def make_switchback_matmul(variant: str = "switchback",
         elif variant == "fp8_switchback":
             y, (x_q, s_x, w_q, s_w) = _fwd_fp8_rowwise_tensorwise(
                 x, w, odt, fwd_fmt)
+            res = (x, w_q, s_w)
+        elif variant == "fp8":
+            # real fp8 execution: row-wise E4M3 X, tensor-wise E4M3 W,
+            # Scalify-style explicit scales folded into one (b, 1) multiply
+            w_q, s_w = F8OPS.tensor_quantize(w, fmt=fwd_fmt, backend=backend)
+            x_q, s_x = F8OPS.row_quantize(x, fmt=fwd_fmt, backend=backend)
+            y = F8OPS.fp8_matmul_dequant(x_q, w_q, s_x * s_w, out_dtype=odt,
+                                         backend=backend)
+            res = (x, w_q, s_w)                       # fp X + fp8 W
+        elif variant == "fp8_mixed":
+            w_q, s_w = F8OPS.tensor_quantize(w, fmt=fwd_fmt, backend=backend)
+            y = F8OPS.fp8_mixed_matmul(
+                x, w_q, s_w, fmt=fwd_fmt, block_rows=block_rows,
+                block_cols=block_cols, fallback_ratio=fallback_ratio,
+                out_dtype=odt, backend=backend)
             res = (x, w_q, s_w)
         return y, res
 
@@ -321,6 +360,27 @@ def make_switchback_matmul(variant: str = "switchback",
             dw = _wgrad_16bit(x, g)
             return dx, dw
 
+        if variant == "fp8":
+            # dgrad in the gradient format (E5M2: more exponent range for
+            # grads), reusing the forward's fp8 W — contracted over its
+            # second dim, never transposed; wgrad switches back to 16-bit
+            x, w_q, s_w = res
+            g_q, s_g = F8OPS.row_quantize(g, fmt=bwd_fmt, backend=backend)
+            dx = F8OPS.fp8_matmul_dequant(g_q, w_q, s_g * s_w,
+                                          transpose_w=True, out_dtype=odt,
+                                          backend=backend)
+            dw = _wgrad_16bit(x, g)
+            return dx, dw
+
+        if variant == "fp8_mixed":
+            x, w_q, s_w = res
+            dx = F8OPS.fp8_mixed_matmul(
+                g, w_q, s_w, fmt=bwd_fmt, block_rows=block_rows,
+                block_cols=block_cols, fallback_ratio=fallback_ratio,
+                transpose_w=True, out_dtype=odt, backend=backend)
+            dw = _wgrad_16bit(x, g)
+            return dx, dw
+
         raise AssertionError(variant)
 
     @jax.custom_vjp
@@ -335,15 +395,19 @@ def make_switchback_matmul(variant: str = "switchback",
 def switchback_linear(x: Array, w: Array, b: Array | None = None, *,
                       variant: str = "switchback",
                       fwd_fmt: str = "e4m3", bwd_fmt: str = "e5m2",
-                      backend: str = "xla") -> Array:
+                      backend: str = "xla",
+                      block_rows: int = 128, block_cols: int = 128,
+                      fallback_ratio: float = 8.0) -> Array:
     """Apply a SwitchBack linear to ``x`` of shape (..., n) with ``w`` of
     shape (n, m). Leading dims are flattened for the 2-D quantized matmul
     (row-wise state = one scale per token, as in the paper) and restored.
-    ``backend`` selects the int8 matmul implementation (module docstring)."""
+    ``backend`` selects the quantized matmul implementation; the block
+    knobs parameterize ``fp8_mixed`` fallback (module docstring)."""
     n = x.shape[-1]
     lead = x.shape[:-1]
     x2 = x.reshape((-1, n))
-    f = make_switchback_matmul(variant, fwd_fmt, bwd_fmt, backend)
+    f = make_switchback_matmul(variant, fwd_fmt, bwd_fmt, backend,
+                               block_rows, block_cols, fallback_ratio)
     y2 = f(x2, w)
     y = y2.reshape(lead + (w.shape[-1],))
     if b is not None:

@@ -1,0 +1,1 @@
+from repro.kernels.fp8_matmul import ops, ref  # noqa: F401

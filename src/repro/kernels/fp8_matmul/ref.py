@@ -1,0 +1,220 @@
+"""Oracle for the fp8 matmul kernels — and the ``xla`` backend itself.
+
+Unlike the int8 SwitchBack kernels (whose integer accumulation is exact, so
+any correct implementation bit-matches any other), fp8 matmuls accumulate in
+f32 and f32 addition is not associative. The parity contract therefore pins
+the *algorithm*, not just the math: the oracle here performs the identical
+blocked computation the Pallas kernel performs — same zero-padding, same
+k-block accumulation order, same scale-fold order — so ``pallas_interpret``
+is **bit-identical** to ``xla`` (CPU XLA dots are bitwise stable across
+row/column tiling, verified by tests/test_fp8_backends.py).
+
+The fp8 rounding itself rides on ``core.quantization.fp8_grid_round`` — the
+f32 bit-trick RNE that tests pin against the frexp/ldexp oracle in
+``core/fp8.py`` — so quantized values land exactly on the fp8 grid and the
+subsequent dtype cast to ``float8_e4m3fn`` / ``float8_e5m2`` is exact.
+
+Scale convention (Scalify-style explicit tensor scales): a quantized tensor
+is ``(q, s)`` with ``q = fp8(x / s)`` in [-1, 1] and ``x ≈ q · s``. Matmul
+dequant is then one multiply: ``y = (x_q · w_q) ⊙ (s_x · s_w)`` — no 127²
+folding as in int8.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import fp8_grid_round
+
+FMT_DTYPE = {"e4m3": jnp.float8_e4m3fn, "e5m2": jnp.float8_e5m2}
+FORMATS = tuple(FMT_DTYPE)
+
+_EPS = 1e-12
+
+
+def _check_fmt(fmt: str):
+    if fmt not in FMT_DTYPE:
+        raise ValueError(f"unknown fp8 format {fmt!r}; expected {FORMATS}")
+
+
+# ---------------------------------------------------------------------------
+# quantizers — the same jnp expressions the kernel bodies evaluate per block
+# ---------------------------------------------------------------------------
+
+def rowwise_fp8_math(x: jax.Array, fmt: str):
+    """Shared row-quantize math: kernels evaluate this per VMEM block, the
+    oracle over the whole array — elementwise, so bitwise identical."""
+    xf = x.astype(jnp.float32)
+    am = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1, keepdims=True), _EPS)
+    q = fp8_grid_round(xf / am, fmt).astype(FMT_DTYPE[fmt])
+    return q, am
+
+
+def cast_fp8_math(x: jax.Array, absmax: jax.Array, fmt: str):
+    """Shared scale-and-round: q = fp8(x / absmax) (absmax broadcasts)."""
+    xf = x.astype(jnp.float32)
+    return fp8_grid_round(xf / jnp.maximum(absmax, _EPS),
+                          fmt).astype(FMT_DTYPE[fmt])
+
+
+def row_quantize(x: jax.Array, *, fmt: str = "e4m3"):
+    """x (B, K) -> (q fp8 (B, K), state f32 (B, 1))."""
+    _check_fmt(fmt)
+    return rowwise_fp8_math(x, fmt)
+
+
+def tensor_quantize(x: jax.Array, *, fmt: str = "e4m3"):
+    """x (R, C) -> (q fp8 (R, C), state f32 (1, 1)). The kernel reduces the
+    absmax per block then maxes across the grid — max is order-free, so the
+    state matches the global reduction here exactly."""
+    _check_fmt(fmt)
+    xf = x.astype(jnp.float32)
+    am = jnp.maximum(jnp.max(jnp.abs(xf)), _EPS).reshape(1, 1)
+    return cast_fp8_math(x, am, fmt), am
+
+
+def block_quantize(x: jax.Array, *, fmt: str = "e4m3",
+                   block_rows: int, block_cols: int):
+    """Blockwise fp8 quantization: one scale per (block_rows × block_cols)
+    tile. x (R, C) -> (q fp8 (R, C), state f32 (nbr, nbc)).
+
+    Zero-pads to block multiples internally (absmax ignores the zeros — a
+    padded edge block's scale is the absmax of its real elements) and
+    mirrors the kernel's per-tile ``x / s`` division bit-for-bit.
+    """
+    _check_fmt(fmt)
+    R, C = x.shape
+    br = min(block_rows, R)
+    bc = min(block_cols, C)
+    pr, pc = (-R) % br, (-C) % bc
+    xp = jnp.pad(x.astype(jnp.float32), ((0, pr), (0, pc)))
+    nbr, nbc = (R + pr) // br, (C + pc) // bc
+    blocks = xp.reshape(nbr, br, nbc, bc)
+    am = jnp.maximum(jnp.max(jnp.abs(blocks), axis=(1, 3)), _EPS)  # (nbr,nbc)
+    am_b = jnp.broadcast_to(am[:, None, :, None], blocks.shape) \
+        .reshape(xp.shape)
+    q = cast_fp8_math(xp, am_b, fmt)
+    return q[:R, :C], am
+
+
+def fallback_mask(state: jax.Array, ratio: float) -> jax.Array:
+    """Outlier-block detection at quantize time: a block falls back to bf16
+    when its absmax exceeds ``ratio`` × the median block absmax (dynamic
+    block-level fallback). Returns f32 0/1 of ``state``'s shape."""
+    med = jnp.median(state)
+    return (state > ratio * med).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmuls — blocked exactly like the kernels (same k-split, same padding)
+# ---------------------------------------------------------------------------
+
+def _dot_f32(a, b, transpose_w: bool):
+    dims = (((1,), (1,)), ((), ())) if transpose_w else (((1,), (0,)), ((), ()))
+    return jax.lax.dot_general(a, b, dimension_numbers=dims,
+                               preferred_element_type=jnp.float32)
+
+
+def _pad2(x, m0, m1):
+    p0, p1 = (-x.shape[0]) % m0, (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def _w_tile(wp, j0, bm, k0, bk, transpose_w):
+    if transpose_w:
+        return wp[j0:j0 + bm, k0:k0 + bk]
+    return wp[k0:k0 + bk, j0:j0 + bm]
+
+
+def fp8_matmul_dequant(x_q: jax.Array, w_q: jax.Array, row_scale: jax.Array,
+                       *, transpose_w: bool = False,
+                       out_dtype=jnp.bfloat16, block_b: int = 256,
+                       block_m: int = 256, block_k: int = 2048):
+    """y = row_scale ⊙ (x_q · w_q[ᵀ]) with f32 accumulation.
+
+    x_q: (B, K) fp8. w_q: (K, M) fp8, or (M, K) if transpose_w (dgrad —
+    contracted over dim 1 of both operands, no transpose materialized).
+    row_scale: (B, 1) f32, the prefolded s_x · s_w.
+
+    Replays the kernel's exact (i, j, k) tiling: pads every dim UP to its
+    block multiple (blocks may exceed the dim, as the kernel's padded
+    operands do) and issues one (block_b × block_k) · (block_k × block_m)
+    dot per tile. Same dot shapes + same values + same add order ⇒ bitwise
+    identical to the Pallas kernel — XLA's gemm reduction order is only
+    reproducible per *shape*, so mirroring just the k-split is not enough.
+    """
+    B, K = x_q.shape
+    M = w_q.shape[0] if transpose_w else w_q.shape[1]
+    bb, bm, bk = block_b, block_m, min(block_k, K)
+    xp = _pad2(x_q.astype(jnp.float32), bb, bk)
+    wp = _pad2(w_q.astype(jnp.float32), bm if transpose_w else bk,
+               bk if transpose_w else bm)
+    sp = _pad2(row_scale, bb, 1)
+    Bp, Kp = xp.shape
+    Mp = wp.shape[0] if transpose_w else wp.shape[1]
+    rows = []
+    for i0 in range(0, Bp, bb):
+        cols = []
+        for j0 in range(0, Mp, bm):
+            acc = jnp.zeros((bb, bm), jnp.float32)
+            for k0 in range(0, Kp, bk):
+                acc = acc + _dot_f32(
+                    xp[i0:i0 + bb, k0:k0 + bk],
+                    _w_tile(wp, j0, bm, k0, bk, transpose_w), transpose_w)
+            cols.append((acc * sp[i0:i0 + bb]).astype(out_dtype))
+        rows.append(jnp.concatenate(cols, axis=1))
+    return jnp.concatenate(rows, axis=0)[:B, :M]
+
+
+def fp8_mixed_matmul_blocks(x16: jax.Array, x_q: jax.Array,
+                            s_blk: jax.Array, fb_blk: jax.Array,
+                            w_q: jax.Array, s_w: jax.Array, *,
+                            transpose_w: bool = False,
+                            out_dtype=jnp.bfloat16,
+                            block_rows: int, block_m: int, block_k: int):
+    """Mixed-precision blocked matmul: fp8 tiles dequantize through their
+    per-block scale; fallback tiles (fb_blk != 0) recompute in bf16 against
+    the dequantized weight — the dynamic block-level fallback contraction.
+
+    x16: (B, K) originals. x_q: (B, K) fp8 with per-(block_rows × block_k)
+    scales s_blk (nbi, nbk) and fallback mask fb_blk (nbi, nbk).
+    w_q: (K, M) fp8 (or (M, K) if transpose_w) with tensor scale s_w (1, 1).
+
+    The weight has ONE representation everywhere (fp8 + scale, Scalify
+    style): fallback tiles use ``(w_q · s_w) → bf16``, not a separate
+    full-precision copy — only the activation/grad side changes precision.
+    Tiling mirrors the kernel exactly (see fp8_matmul_dequant).
+    """
+    B, K = x_q.shape
+    M = w_q.shape[0] if transpose_w else w_q.shape[1]
+    br, bm, bk = block_rows, block_m, block_k
+    xqp = _pad2(x_q.astype(jnp.float32), br, bk)
+    x16p = _pad2(x16.astype(jnp.bfloat16), br, bk)
+    wp = _pad2(w_q.astype(jnp.float32), bm if transpose_w else bk,
+               bk if transpose_w else bm)
+    Bp, Kp = xqp.shape
+    Mp = wp.shape[0] if transpose_w else wp.shape[1]
+    nbk = Kp // bk
+    assert s_blk.shape == (Bp // br, nbk), (s_blk.shape, Bp, br, nbk)
+    sw = s_w.reshape(())
+    rows = []
+    for bi, i0 in enumerate(range(0, Bp, br)):
+        cols = []
+        for j0 in range(0, Mp, bm):
+            acc = jnp.zeros((br, bm), jnp.float32)
+            for ki in range(nbk):
+                ws = _w_tile(wp, j0, bm, ki * bk, bk, transpose_w)
+                # dequant folds into the LHS operand (as in the kernel): a
+                # post-dot multiply would FMA-contract into the acc add
+                xs = xqp[i0:i0 + br, ki * bk:(ki + 1) * bk] \
+                    * (s_blk[bi, ki] * sw)
+                d8 = _dot_f32(xs, ws, transpose_w)
+                w16 = (ws * sw).astype(jnp.bfloat16)
+                d16 = _dot_f32(x16p[i0:i0 + br, ki * bk:(ki + 1) * bk],
+                               w16, transpose_w)
+                acc = acc + jnp.where(fb_blk[bi, ki] != 0, d16, d8)
+            cols.append(acc.astype(out_dtype))
+        rows.append(jnp.concatenate(cols, axis=1))
+    return jnp.concatenate(rows, axis=0)[:B, :M]

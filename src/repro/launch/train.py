@@ -65,6 +65,12 @@ def main():
     ap.add_argument("--quant-mode", default="bf16")
     ap.add_argument("--kernel-backend", default="xla",
                     choices=("xla", "pallas", "pallas_interpret"))
+    ap.add_argument("--fp8-block", type=int, nargs=2, default=(128, 128),
+                    metavar=("ROWS", "COLS"),
+                    help="fp8_mixed blockwise-quantization tile shape")
+    ap.add_argument("--fp8-fallback-ratio", type=float, default=8.0,
+                    help="fp8_mixed: tile absmax > ratio x median falls "
+                         "back to bf16 (lower = more conservative)")
     ap.add_argument("--attn-impl", default="flash_scan",
                     choices=("flash_scan", "dense"),
                     help="XLA attention path (pallas backends use the "
@@ -103,6 +109,9 @@ def main():
                      loss_scaler=args.loss_scaler,
                      quant_mode=args.quant_mode,
                      kernel_backend=args.kernel_backend,
+                     fp8_block_rows=args.fp8_block[0],
+                     fp8_block_cols=args.fp8_block[1],
+                     fp8_fallback_ratio=args.fp8_fallback_ratio,
                      microbatch_steps=args.microbatch)
     policy = QuantPolicy.from_train_config(tc)
     data_fn = make_data(cfg, args.batch, args.seq)

@@ -1,0 +1,334 @@
+"""Parity + property harness for the real fp8 matmul kernels (DESIGN.md §13).
+
+The contract here is stricter than the int8 harness: because the oracle in
+kernels/fp8_matmul/ref.py replays the Pallas kernel's exact (i, j, k) tiling
+(same padded shapes, same per-tile dot shapes, same accumulation order, same
+scale-fold-into-operand), ``pallas_interpret`` must be **bit-identical** to
+``xla`` on the forward and both gradients — every assertion below is
+``assert_array_equal`` on the raw bits, not an allclose.
+
+Plus the blockwise-quantization properties the ISSUE pins:
+  * round-trip error bounded by ``core.fp8.fp8_quantization_step``,
+  * quantized outputs land exactly on the ``core.fp8.fp8_values`` grid
+    (and bit-match the frexp/ldexp oracle ``core.fp8.fp8_round``),
+  * injected outlier blocks flip exactly their fallback-mask bits and route
+    through the bf16 path of the mixed matmul.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from sweeps import integers, sweep
+
+from repro.core import fp8 as FP8
+from repro.core import switchback as SB
+from repro.core.precision import QuantPolicy, quant_linear
+from repro.kernels.fp8_matmul import ops as K
+from repro.kernels.fp8_matmul import ref as R
+
+key = jax.random.PRNGKey(23)
+kx, kw, kg = jax.random.split(key, 3)
+
+# block sizes in play: matmul tiles from choose_blocks (>=256), row-quantize
+# 256 rows, tensor-quantize 512 rows, mixed tiles 128×128. Shapes hit:
+# aligned, nothing-aligned (padding on every dim), B > one block, and a
+# K / an M past one k/m block.
+PARITY_SHAPES = [
+    (64, 128, 96),        # small, MXU-friendly
+    (37, 130, 50),        # nothing aligned: padding on every dim
+    (300, 257, 129),      # B > block_b after padding, odd K/M
+    (8, 600, 24),         # K spans multiple k-blocks of the mixed kernel
+    (8, 64, 600),         # M spans multiple m-blocks
+]
+
+_BITS_DT = {4: jnp.uint32, 2: jnp.uint16, 1: jnp.uint8}
+
+
+def _bits(a) -> np.ndarray:
+    """Raw bits of a float array — equality on these is bit-identity."""
+    a = jnp.asarray(a)
+    return np.asarray(jax.lax.bitcast_convert_type(a, _BITS_DT[a.dtype.itemsize]))
+
+
+def _assert_bitexact(ref, got, what: str):
+    np.testing.assert_array_equal(_bits(ref), _bits(got), err_msg=what)
+
+
+# ---------------------------------------------------------------------------
+# quantizer parity: xla == pallas_interpret, bitwise, q and state
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fmt", R.FORMATS)
+@sweep(n_cases=6, seed="fp8q", r=integers(1, 300), c=integers(1, 270))
+def test_quantize_backend_parity_bitexact(fmt, r, c):
+    x = jax.random.normal(kx, (r, c), jnp.bfloat16) * 3.0
+    for name, fn, kw_ in [
+        ("row", K.row_quantize, {}),
+        ("tensor", K.tensor_quantize, {}),
+        ("block", K.block_quantize, dict(block_rows=64, block_cols=64)),
+    ]:
+        q0, s0 = fn(x, fmt=fmt, backend="xla", **kw_)
+        q1, s1 = fn(x, fmt=fmt, backend="pallas_interpret", **kw_)
+        assert q0.dtype == q1.dtype == R.FMT_DTYPE[fmt]
+        _assert_bitexact(q0, q1, f"{name} q {fmt} ({r},{c})")
+        _assert_bitexact(s0, s1, f"{name} state {fmt} ({r},{c})")
+
+
+# ---------------------------------------------------------------------------
+# matmul parity: per-tensor/row scales, both contractions, bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("transpose_w", [False, True])
+@pytest.mark.parametrize("fmt", R.FORMATS)
+@pytest.mark.parametrize("shape", PARITY_SHAPES)
+def test_matmul_dequant_backend_parity_bitexact(shape, fmt, transpose_w):
+    b, n, m = shape
+    x = jax.random.normal(kx, (b, n), jnp.bfloat16)
+    w = jax.random.normal(kw, (m, n) if transpose_w else (n, m),
+                          jnp.float32) * 0.05
+    x_q, s_x = K.row_quantize(x, fmt=fmt)
+    w_q, s_w = K.tensor_quantize(w, fmt=fmt)
+    outs = [K.fp8_matmul_dequant(x_q, w_q, s_x * s_w, transpose_w=transpose_w,
+                                 backend=bk)
+            for bk in ("xla", "pallas_interpret")]
+    assert outs[0].shape == (b, m) and outs[0].dtype == jnp.bfloat16
+    _assert_bitexact(outs[0], outs[1], f"matmul {shape} {fmt} T={transpose_w}")
+
+
+@pytest.mark.parametrize("transpose_w", [False, True])
+@sweep(n_cases=6, seed="fp8mix",
+       b=integers(1, 300), n=integers(1, 300), m=integers(1, 300),
+       br=integers(8, 128), bc=integers(8, 128))
+def test_mixed_matmul_backend_parity_bitexact(transpose_w, b, n, m, br, bc):
+    x = jax.random.normal(kx, (b, n), jnp.bfloat16)
+    w = jax.random.normal(kw, (m, n) if transpose_w else (n, m),
+                          jnp.float32) * 0.05
+    w_q, s_w = K.tensor_quantize(w)
+    # ratio=1.05: with gaussian blocks a decent fraction of tiles sit above
+    # 1.05× the median absmax, so BOTH kernel branches execute
+    outs = [K.fp8_mixed_matmul(x, w_q, s_w, block_rows=br, block_cols=bc,
+                               fallback_ratio=1.05, transpose_w=transpose_w,
+                               backend=bk)
+            for bk in ("xla", "pallas_interpret")]
+    assert outs[0].shape == (b, m) and outs[0].dtype == jnp.bfloat16
+    _assert_bitexact(outs[0], outs[1],
+                     f"mixed ({b},{n},{m}) br={br} bc={bc} T={transpose_w}")
+
+
+# ---------------------------------------------------------------------------
+# full custom-VJP parity through core/switchback: y, dx, dw bitwise
+# ---------------------------------------------------------------------------
+
+def _run_vjp(variant, backend, x, w, g):
+    f = SB.make_switchback_matmul(variant, backend=backend)
+    y, vjp = jax.vjp(f, x, w)
+    dx, dw = vjp(g)
+    return y, dx, dw
+
+
+@pytest.mark.parametrize("variant", ["fp8", "fp8_mixed"])
+@pytest.mark.parametrize("shape", PARITY_SHAPES)
+def test_variant_vjp_backend_parity_bitexact(variant, shape):
+    b, n, m = shape
+    x = jax.random.normal(kx, (b, n), jnp.bfloat16)
+    w = jax.random.normal(kw, (n, m), jnp.float32) * 0.05
+    g = jax.random.normal(kg, (b, m), jnp.bfloat16)
+    ref = _run_vjp(variant, "xla", x, w, g)
+    got = _run_vjp(variant, "pallas_interpret", x, w, g)
+    for name, a, c in zip(("y", "dx", "dw"), ref, got):
+        _assert_bitexact(a, c, f"{variant} {shape} {name}")
+
+
+@pytest.mark.parametrize("mode", ["fp8", "fp8_mixed"])
+def test_quant_linear_fp8_policy_backend_parity(mode):
+    """The config-level path: QuantPolicy mode + backend through
+    quant_linear with a 3-D batch and a bias, forward AND gradient."""
+    x = jax.random.normal(kx, (2, 19, 130), jnp.bfloat16)
+    w = jax.random.normal(kw, (130, 50), jnp.float32) * 0.05
+    b = jax.random.normal(kg, (50,), jnp.float32) * 0.1
+
+    def loss(w_, backend):
+        pol = QuantPolicy(mode, backend=backend, fp8_block_rows=16,
+                          fp8_block_cols=32, fp8_fallback_ratio=1.1)
+        return quant_linear(x, w_, b, policy=pol).astype(jnp.float32).sum()
+
+    l0, dw0 = jax.value_and_grad(loss)(w, "xla")
+    l1, dw1 = jax.value_and_grad(loss)(w, "pallas_interpret")
+    _assert_bitexact(l0, l1, f"{mode} loss")
+    _assert_bitexact(dw0, dw1, f"{mode} dw")
+
+
+def test_int8_mode_alias():
+    """quant_mode="int8" is an alias for the int8 SwitchBack variant — the
+    knob spans int8 | fp8 | fp8_mixed as one axis."""
+    x = jax.random.normal(kx, (8, 64), jnp.bfloat16)
+    w = jax.random.normal(kw, (64, 32), jnp.float32) * 0.05
+    y_alias = quant_linear(x, w, policy=QuantPolicy("int8"))
+    y_full = quant_linear(x, w, policy=QuantPolicy("int8_switchback"))
+    _assert_bitexact(y_alias, y_full, "int8 alias")
+
+
+# ---------------------------------------------------------------------------
+# blockwise-quantization properties (the ISSUE's satellite #2)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fmt", R.FORMATS)
+@sweep(n_cases=6, seed="fp8prop", r=integers(1, 200), c=integers(1, 200),
+       br=integers(4, 64), bc=integers(4, 64))
+def test_block_quantize_roundtrip_and_grid(fmt, r, c, br, bc):
+    spec = FP8.SPECS[fmt]
+    x = jax.random.normal(kx, (r, c), jnp.float32) * 5.0
+    q, s = K.block_quantize(x, fmt=fmt, block_rows=br, block_cols=bc)
+    nbr, nbc = -(-r // min(br, r)), -(-c // min(bc, c))
+    assert s.shape == (nbr, nbc)
+    # broadcast each block's scale back over its elements
+    s_full = np.zeros((r, c), np.float32)
+    eb_r, eb_c = min(br, r), min(bc, c)
+    for i in range(nbr):
+        for j in range(nbc):
+            s_full[i * eb_r:(i + 1) * eb_r, j * eb_c:(j + 1) * eb_c] = s[i, j]
+    v = np.asarray(x, np.float32) / s_full          # the scaled values
+    qf = np.asarray(q.astype(jnp.float32))
+
+    # (a) bit-match the from-first-principles frexp/ldexp oracle
+    _assert_bitexact(FP8.fp8_round(jnp.asarray(v), spec), qf.astype(np.float32),
+                     f"fp8_round oracle {fmt}")
+    # (b) every quantized magnitude is exactly a representable fp8 value
+    grid = FP8.fp8_values(spec).astype(np.float32)
+    assert np.isin(np.abs(qf), grid).all(), "values off the fp8 grid"
+    # (c) round-trip error bound: |q - v| <= step(v)/2 in the scaled domain
+    # (RNE onto the grid), hence |q·s - x| <= step/2 · s in the x domain
+    step = np.asarray(FP8.fp8_quantization_step(jnp.asarray(v), spec))
+    assert (np.abs(qf - v) <= 0.5 * step + 1e-9).all(), \
+        "round-trip error exceeds half the local quantization step"
+    assert (np.abs(qf * s_full - np.asarray(x)) <=
+            0.5 * step * s_full + 1e-6).all()
+
+
+def test_fallback_mask_exact_on_injected_outliers():
+    """Boosted blocks — and ONLY those — must trip the fallback mask."""
+    r = c = 256
+    br = bc = 64                                     # 4×4 = 16 blocks
+    x = jax.random.normal(kx, (r, c), jnp.float32)
+    outliers = [(0, 1), (1, 3), (3, 0)]
+    xb = np.asarray(x).copy()
+    for (i, j) in outliers:
+        xb[i * br:(i + 1) * br, j * bc:(j + 1) * bc] *= 1000.0
+    xb = jnp.asarray(xb)
+    for backend in ("xla", "pallas_interpret"):
+        q, s = K.block_quantize(xb, block_rows=br, block_cols=bc,
+                                backend=backend)
+        mask = np.asarray(K.fallback_mask(s, ratio=8.0))
+        expected = np.zeros((4, 4), np.float32)
+        for (i, j) in outliers:
+            expected[i, j] = 1.0
+        np.testing.assert_array_equal(mask, expected, err_msg=backend)
+
+
+def test_mixed_matmul_routes_outlier_blocks_to_bf16():
+    """With injected outliers, the mixed matmul must equal the oracle run
+    with exactly the expected mask — outlier tiles on the bf16 path, clean
+    tiles on the fp8 path — and ratio extremes select each path globally."""
+    b, n, m = 128, 256, 96
+    br = bk = 64
+    x = np.array(jax.random.normal(kx, (b, n), jnp.float32))
+    x[:br, bk:2 * bk] *= 1000.0                      # block (0, 1) is hot
+    x = jnp.asarray(x, jnp.bfloat16)
+    w = jax.random.normal(kw, (n, m), jnp.float32) * 0.05
+    w_q, s_w = K.tensor_quantize(w)
+
+    def oracle(fb):
+        x_q, s_blk = R.block_quantize(x, fmt="e4m3", block_rows=br,
+                                      block_cols=bk)
+        return R.fp8_mixed_matmul_blocks(
+            x, x_q, s_blk, jnp.asarray(fb), w_q, s_w,
+            block_rows=br, block_m=96, block_k=bk)
+
+    expected = np.zeros((b // br, n // bk), np.float32)
+    expected[0, 1] = 1.0
+    y = K.fp8_mixed_matmul(x, w_q, s_w, block_rows=br, block_cols=bk,
+                           fallback_ratio=8.0)
+    _assert_bitexact(oracle(expected), y, "outlier routing")
+
+    # ratio→0: every block absmax > 0 = ratio × median ⇒ all tiles bf16
+    y_all16 = K.fp8_mixed_matmul(x, w_q, s_w, block_rows=br, block_cols=bk,
+                                 fallback_ratio=0.0)
+    _assert_bitexact(oracle(np.ones_like(expected)), y_all16, "all-bf16")
+    # ratio→∞: no fallback ⇒ all tiles fp8
+    y_all8 = K.fp8_mixed_matmul(x, w_q, s_w, block_rows=br, block_cols=bk,
+                                fallback_ratio=1e30)
+    _assert_bitexact(oracle(np.zeros_like(expected)), y_all8, "all-fp8")
+    # sanity: the two extremes genuinely differ (the hot block's fp8 tile
+    # quantizes coarsely, so the outputs cannot coincide)
+    assert not np.array_equal(_bits(y_all16), _bits(y_all8))
+
+
+def test_gradients_use_e5m2():
+    """The backward pass quantizes the incoming gradient in E5M2: a gradient
+    magnitude above E4M3's max normal (448) but within E5M2 range must
+    survive row-quantization in the bwd format unclipped."""
+    g = jnp.full((4, 8), 1.0, jnp.float32).at[0, 0].set(30000.0)
+    q, s = K.row_quantize(g, fmt="e5m2")
+    assert q.dtype == jnp.float8_e5m2
+    # scale is the row absmax: 30000 / 30000 = 1.0 round-trips exactly
+    assert float(q[0, 0].astype(jnp.float32) * s[0, 0]) == 30000.0
+
+
+def test_unknown_format_raises():
+    x = jnp.ones((4, 4), jnp.bfloat16)
+    with pytest.raises(ValueError, match="unknown fp8 format"):
+        K.row_quantize(x, fmt="e3m4")
+
+
+# ---------------------------------------------------------------------------
+# stability regression: a short fp8_mixed training curve must track bf16
+# (paper §4: the low-precision scheme may not change the loss trajectory)
+# ---------------------------------------------------------------------------
+
+def _train_curve(quant_mode: str, steps: int = 30):
+    from repro.configs import get_reduced_config
+    from repro.configs.base import ParallelConfig, TrainConfig
+    from repro.data import BigramLM
+    from repro.launch.mesh import make_test_mesh
+    from repro.models import build
+    from repro.train import make_engine
+
+    cfg = get_reduced_config("smollm-360m")
+    tc = TrainConfig(learning_rate=1e-3, warmup_steps=3, total_steps=100,
+                     loss_scaler="none", quant_mode=quant_mode,
+                     fp8_block_rows=32, fp8_block_cols=32)
+    mesh = make_test_mesh((1, 1))
+    par = ParallelConfig(mesh_shape=(1, 1), mesh_axes=("data", "model"),
+                         remat="block")
+    pol = QuantPolicy.from_train_config(tc)
+    d = BigramLM(cfg.vocab_size, seed=7, temperature=0.3)
+
+    def batch(i):
+        return jax.tree.map(jnp.asarray, d.batch(8, 32))
+
+    engine = make_engine(build(cfg), tc, par, mesh, batch(0), policy=pol)
+    state = engine.init_state(seed=0)
+    losses = []
+    for i in range(steps):
+        state, m = engine.step(state, engine.shard_batch(batch(i)))
+        losses.append(float(m["loss"]))
+    return losses
+
+
+def test_fp8_mixed_trains_like_bf16_with_zero_spikes():
+    """The end-to-end stability regression the ISSUE pins: a short engine
+    run at quant_mode=fp8_mixed must (a) end within 0.5% of the bf16 final
+    loss on the identical data stream and (b) fire the paper's loss-spike
+    detector zero times (thresholds tightened for a 30-step curve)."""
+    from repro.stability import LossSpikeDetector
+
+    curves = {m: _train_curve(m) for m in ("bf16", "fp8_mixed")}
+    for mode, losses in curves.items():
+        assert np.isfinite(losses).all(), f"{mode} diverged"
+        det = LossSpikeDetector(ignore_first=0, min_history=5)
+        for i, l in enumerate(losses):
+            det.record(i, l)
+        assert det.spike_steps() == [], f"{mode} loss spiked"
+    rel = abs(curves["fp8_mixed"][-1] - curves["bf16"][-1]) \
+        / abs(curves["bf16"][-1])
+    assert rel <= 5e-3, f"fp8_mixed final loss off bf16 by {rel:.2%}"
