@@ -1,1 +1,2 @@
-from repro.checkpoint.manager import CheckpointManager  # noqa: F401
+from repro.checkpoint.manager import (  # noqa: F401
+    CheckpointCorruption, CheckpointManager, CheckpointWriteError)

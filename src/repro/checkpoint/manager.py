@@ -1,18 +1,30 @@
-"""Checkpointing: atomic, rotating, async-capable, elastic-restore.
+"""Checkpointing: atomic, rotating, async-capable, elastic-restore, verified.
 
 Layout (one directory per step):
 
     <dir>/step_000100.tmp/...   (written)
     <dir>/step_000100/          (atomic rename on completion)
         META.json               tree structure + shapes + dtypes + step
+                                + per-leaf crc32 checksums
         <leaf-path>.npy         one file per tensor (streams large models)
 
 Fault-tolerance properties:
   * atomic: a crash mid-save never corrupts the latest checkpoint (tmp dir
-    + rename; rename is atomic on POSIX).
+    + rename; rename is atomic on POSIX).  ``all_steps`` only counts
+    directories with a README-able META.json, so a crash mid-rename (or a
+    stray ``.tmp``) is invisible to ``latest_step``/``restore``.
+  * verified: META.json records a crc32 per leaf; ``verify(step)`` checks
+    existence, shape, dtype and checksum of every leaf, and
+    ``restore(step=None)`` falls back to the newest checkpoint that
+    verifies instead of crashing on a truncated or bit-flipped one
+    (explicit ``restore(step=k)`` stays strict and raises
+    ``CheckpointCorruption``).
   * rotating: keep_last K checkpoints, older deleted after a successful save.
   * async: `save_async` snapshots to host memory synchronously (cheap) and
-    writes on a worker thread, overlapping training.
+    writes on a worker thread, overlapping training.  A worker failure is
+    re-raised as ``CheckpointWriteError`` carrying the step whose write
+    failed, at the next save/wait boundary — attributable, not a bare
+    exception surfacing arbitrarily later.
   * elastic restore: tensors are stored as *global* arrays with no mesh
     metadata; `restore(..., shardings=)` device_puts onto whatever mesh the
     restarted job has — a different pod count or mesh shape just works.
@@ -25,11 +37,35 @@ import json
 import os
 import shutil
 import threading
+import warnings
+import zlib
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class CheckpointCorruption(RuntimeError):
+    """A checkpoint directory failed integrity verification."""
+
+    def __init__(self, step: int, reason: str):
+        super().__init__(f"checkpoint step {step} corrupt: {reason}")
+        self.step = step
+        self.reason = reason
+
+
+class CheckpointWriteError(RuntimeError):
+    """An async checkpoint write failed; ``step`` names the save."""
+
+    def __init__(self, step: int, cause: BaseException):
+        super().__init__(f"checkpoint write for step {step} failed: {cause!r}")
+        self.step = step
+        self.__cause__ = cause
+
+
+def _crc32(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
 
 
 def _host_snapshot(tree):
@@ -102,7 +138,7 @@ class CheckpointManager:
             try:
                 self._write(step, host_tree, extra or {})
             except BaseException as e:     # propagate on next wait()
-                self._error = e
+                self._error = CheckpointWriteError(step, e)
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
@@ -111,6 +147,14 @@ class CheckpointManager:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        self.poll_error()
+
+    def poll_error(self):
+        """Raise a completed worker's failure without blocking on a live
+        write — the trainer polls this at every checkpoint boundary so a
+        failed save surfaces at the boundary that caused it."""
+        if self._thread is not None and self._thread.is_alive():
+            return
         if self._error is not None:
             e, self._error = self._error, None
             raise e
@@ -131,7 +175,8 @@ class CheckpointManager:
             fn = path.replace("/", "__") + ".npy"
             np.save(os.path.join(tmp, fn), arr)
             meta["leaves"][path] = {"file": fn, "shape": list(arr.shape),
-                                    "dtype": str(arr.dtype)}
+                                    "dtype": str(arr.dtype),
+                                    "crc32": _crc32(arr)}
         with open(os.path.join(tmp, "META.json"), "w") as f:
             json.dump(meta, f)
         if os.path.exists(final):
@@ -147,32 +192,99 @@ class CheckpointManager:
 
     # --------------------------------------------------------------- restore
     def all_steps(self):
+        """Steps with a complete directory: a ``.tmp`` suffix or a missing
+        META.json (crash mid-rename / mid-write artifacts) doesn't count."""
         out = []
         for d in os.listdir(self.directory):
             if d.startswith("step_") and not d.endswith(".tmp"):
                 try:
-                    out.append(int(d[5:]))
+                    s = int(d[5:])
                 except ValueError:
-                    pass
+                    continue
+                if os.path.exists(os.path.join(self.directory, d,
+                                               "META.json")):
+                    out.append(s)
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    # ---------------------------------------------------------------- verify
+    def _read_meta(self, step: int) -> Dict:
+        d = os.path.join(self.directory, f"step_{step:08d}")
+        try:
+            with open(os.path.join(d, "META.json")) as f:
+                return json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            raise CheckpointCorruption(step, f"META.json unreadable: {e}")
+
+    def verify(self, step: int) -> None:
+        """Full integrity check of one checkpoint: META parses and every
+        leaf file loads with the recorded shape, dtype and crc32.  Raises
+        ``CheckpointCorruption`` on the first violation."""
+        d = os.path.join(self.directory, f"step_{step:08d}")
+        meta = self._read_meta(step)
+        for path, info in meta["leaves"].items():
+            fn = os.path.join(d, info["file"])
+            try:
+                arr = np.load(fn)
+            except (OSError, ValueError) as e:
+                raise CheckpointCorruption(step, f"leaf {path}: {e}")
+            if list(arr.shape) != info["shape"]:
+                raise CheckpointCorruption(
+                    step, f"leaf {path}: shape {list(arr.shape)} != "
+                    f"recorded {info['shape']}")
+            if str(arr.dtype) != info["dtype"]:
+                raise CheckpointCorruption(
+                    step, f"leaf {path}: dtype {arr.dtype} != "
+                    f"recorded {info['dtype']}")
+            # crc32 absent in pre-verification checkpoints: shape/dtype only
+            if "crc32" in info and _crc32(arr) != info["crc32"]:
+                raise CheckpointCorruption(step, f"leaf {path}: crc mismatch")
+
+    def valid_steps(self, max_step: Optional[int] = None):
+        """Steps that pass full verification, oldest→newest (the
+        supervisor's rewind ladder walks this list backwards)."""
+        out = []
+        for s in self.all_steps():
+            if max_step is not None and s > max_step:
+                continue
+            try:
+                self.verify(s)
+            except CheckpointCorruption:
+                continue
+            out.append(s)
+        return out
+
     def restore(self, step: Optional[int] = None, *, like: Any = None,
                 shardings: Any = None):
-        """Load checkpoint `step` (default latest). If `like` is given, the
+        """Load checkpoint `step` (default: newest that passes
+        verification — a truncated or mid-rename directory is skipped with
+        a warning instead of crashing the resume). If `like` is given, the
         stored tree is validated against its structure; if `shardings` is
-        given each leaf is device_put with it (elastic re-mesh)."""
+        given each leaf is device_put with it (elastic re-mesh).  An
+        explicit `step` is strict: corruption raises."""
         self.wait()
         if step is None:
-            step = self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+            last_err: Optional[CheckpointCorruption] = None
+            for s in reversed(self.all_steps()):
+                try:
+                    self.verify(s)
+                except CheckpointCorruption as e:
+                    warnings.warn(f"skipping corrupt checkpoint: {e}")
+                    last_err = e
+                    continue
+                step = s
+                break
+            if step is None:
+                if last_err is not None:
+                    raise last_err
+                raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        else:
+            self.verify(step)
         d = os.path.join(self.directory, f"step_{step:08d}")
-        with open(os.path.join(d, "META.json")) as f:
-            meta = json.load(f)
+        meta = self._read_meta(step)
 
         arrays = {p: np.load(os.path.join(d, info["file"]))
                   for p, info in meta["leaves"].items()}

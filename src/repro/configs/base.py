@@ -183,6 +183,33 @@ class TrainConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class SupervisorConfig:
+    """Knobs for the self-healing TrainSupervisor (repro.train.supervisor).
+
+    Detection runs at the trainer's flush granularity on the metrics it
+    already fetches; recovery is the paper-era mitigation: restore the
+    last good checkpoint and deterministically skip past the offending
+    data window (the pipeline is a pure function of step, so skip =
+    advance the data cursor).  Repeat failures escalate — rewind →
+    rewind one checkpoint earlier + skip wider → abort — under bounded
+    retries.
+    """
+    checkpoint_every: int = 10       # supervisor requires checkpoints
+    keep_checkpoints: int = 4        # escalation rewinds need depth > 1
+    max_retries: int = 3             # rewinds per incident before abort
+    max_total_rewinds: int = 12      # global bound across all incidents
+    skip_margin: int = 1             # data steps skipped past the fault
+    skip_widen: int = 8              # extra skip per escalation attempt
+    grad_norm_ratio: float = 20.0    # grad_norm > ratio × running EMA
+    grad_norm_abs: float = float("inf")  # absolute grad-norm ceiling
+    loss_jump_ratio: float = 3.0     # loss > ratio × running EMA
+    detect_warmup: int = 10          # steps of EMA before ratio checks
+    spike_min_history: int = 20      # LossSpikeDetector.min_history
+    spike_z: float = 3.2             # LossSpikeDetector.z_threshold
+    log_every: int = 10
+
+
+@dataclasses.dataclass(frozen=True)
 class ServeConfig:
     """Knobs for the continuously-batched inference engine (repro.serve).
 

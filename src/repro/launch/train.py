@@ -25,12 +25,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ALL_ARCHS, get_reduced_config
-from repro.configs.base import CLIPConfig, ParallelConfig, TrainConfig
+from repro.configs.base import (CLIPConfig, ParallelConfig, SupervisorConfig,
+                                TrainConfig)
 from repro.core.precision import QuantPolicy
 from repro.data import BigramLM, SyntheticCLIP, SyntheticSeq2Seq
 from repro.launch.mesh import make_cli_mesh
 from repro.models import build
-from repro.train import Trainer, make_engine
+from repro.train import FaultPlan, Trainer, make_engine
 
 
 def make_data(cfg, batch: int, seq: int):
@@ -83,6 +84,16 @@ def main():
     ap.add_argument("--beta2", type=float, default=0.95)
     ap.add_argument("--loss-scaler", default="none")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--supervise", action="store_true",
+                    help="run under the self-healing TrainSupervisor "
+                         "(anomaly detection -> verified-checkpoint rewind "
+                         "-> deterministic data skip); needs --ckpt-dir")
+    ap.add_argument("--fault-plan", default=None,
+                    help="inject faults: JSON list (inline or a file path) "
+                         'of {"step", "kind", ...} specs — see '
+                         "repro/train/faults.py for kinds")
+    ap.add_argument("--max-retries", type=int, default=3,
+                    help="supervisor: rewinds per incident before abort")
     ap.add_argument("--microbatch", type=int, default=1)
     ap.add_argument("--mesh", default="auto",
                     choices=("auto", "test", "single", "multi"))
@@ -125,16 +136,32 @@ def main():
           f"{n_sharded}/{len(jax.tree.leaves(state.params))} param tensors "
           f"partitioned, step donated")
 
-    trainer = Trainer(engine.step, state, checkpoint_dir=args.ckpt_dir,
-                      checkpoint_every=max(args.steps // 3, 10)
-                      if args.ckpt_dir else 0, log_every=10,
-                      state_shardings=engine.state_shardings)
-    start = trainer.maybe_resume()
-    trainer.run(lambda i: engine.shard_batch(data_fn(i)),
-                args.steps - start)
+    plan = FaultPlan.from_json(args.fault_plan) if args.fault_plan else None
+    ckpt_every = max(args.steps // 3, 10) if args.ckpt_dir else 0
+    if args.supervise:
+        if not args.ckpt_dir:
+            ap.error("--supervise needs --ckpt-dir (rewind is the "
+                     "recovery primitive)")
+        sup = engine.make_supervisor(
+            state, data_fn, checkpoint_dir=args.ckpt_dir,
+            config=SupervisorConfig(checkpoint_every=ckpt_every,
+                                    max_retries=args.max_retries),
+            fault_plan=plan)
+        start = sup.maybe_resume()
+        sup.run(args.steps - start)
+        trainer = sup.trainer
+    else:
+        trainer = Trainer(engine.step, state, checkpoint_dir=args.ckpt_dir,
+                          checkpoint_every=ckpt_every, log_every=10,
+                          state_shardings=engine.state_shardings,
+                          fault_plan=plan)
+        start = trainer.maybe_resume()
+        trainer.run(lambda i: engine.shard_batch(data_fn(i)),
+                    args.steps - start)
+        sup = None
     if trainer.history:
         print("final loss:", trainer.history[-1]["loss"])
-        print("stability:", trainer.stability_report())
+        print("stability:", (sup or trainer).stability_report())
     else:
         print(f"nothing to do: resumed at step {start} >= --steps "
               f"{args.steps}")

@@ -44,6 +44,14 @@ class RMSMonitor:
     def layers(self) -> List[str]:
         return sorted(self.history)
 
+    def rollback(self, step: int):
+        """Drop records at steps >= ``step`` (checkpoint rewind): the
+        re-executed steps will be recorded again."""
+        keep = [i for i, s in enumerate(self.steps) if s < step]
+        self.steps = [self.steps[i] for i in keep]
+        self.history = {name: [series[i] for i in keep if i < len(series)]
+                        for name, series in self.history.items()}
+
     def predicts_loss_spike(self, layer: str, loss_spike_steps: Sequence[int]
                             ) -> Dict[str, float]:
         """App. D analysis: fraction of loss spikes that follow an RMS spike

@@ -4,3 +4,7 @@ from repro.train.train_step import (  # noqa: F401
 from repro.train.engine import (  # noqa: F401
     TrainEngine, batch_shardings, make_engine, make_shard_ctx, set_mesh)
 from repro.train.trainer import Trainer, TrainerHooks  # noqa: F401
+from repro.train.supervisor import (  # noqa: F401
+    TrainSupervisor, TrainingAborted)
+from repro.train.faults import (  # noqa: F401
+    FaultPlan, FaultSpec, FaultyCheckpointManager, SimulatedCrash)

@@ -144,6 +144,21 @@ class TrainEngine:
         """Place a host/global batch onto the mesh's batch shardings."""
         return jax.device_put(batch, self.batch_shardings)
 
+    def make_supervisor(self, state, data_fn, *, checkpoint_dir: str,
+                        config=None, fault_plan=None, **kw):
+        """Self-healing trainer over this engine's step: detection →
+        crc-verified checkpoint rewind → deterministic data skip
+        (train/supervisor.py).  ``data_fn(j)`` must be a pure function of
+        the data index; batches are sharded onto the engine's mesh here.
+        ``fault_plan`` (train/faults.py) is the injection knob — None
+        leaves the production path untouched."""
+        from repro.train.supervisor import TrainSupervisor
+        return TrainSupervisor(
+            self.step, state, lambda j: self.shard_batch(data_fn(j)),
+            checkpoint_dir=checkpoint_dir, config=config,
+            state_shardings=self.state_shardings, fault_plan=fault_plan,
+            **kw)
+
     def lower(self, batch_abs=None):
         """Lower the train step against abstract inputs (dry-run path)."""
         batch_abs = self.batch_spec if batch_abs is None else batch_abs

@@ -1,12 +1,20 @@
 """Host training loop with the full fault-tolerance story:
 
-  * auto-resume from the latest checkpoint (deterministic data resume —
-    the pipeline is a pure function of step),
-  * async rotating checkpoints (atomic renames),
-  * straggler watchdog (per-step EMA timing; slow steps logged and can
-    trigger an early checkpoint),
+  * auto-resume from the latest *valid* checkpoint (deterministic data
+    resume — the pipeline is a pure function of step; corrupt or
+    mid-rename checkpoint directories are skipped, not crashed on),
+  * async rotating checkpoints (atomic renames, per-leaf crc32 verified on
+    restore; a failed async write surfaces as CheckpointWriteError at the
+    next checkpoint boundary, attributed to the step that failed),
+  * straggler watchdog (per-step EMA timing; slow steps trigger an early
+    checkpoint so a failing host loses minimal work — counted in
+    ``counters["early_checkpoints"]``),
   * stability monitoring: per-tensor RMS_t recording + loss-spike detection
-    (paper §3.4 / App. D) with the RMS→loss-spike predictive analysis.
+    (paper §3.4 / App. D) with the RMS→loss-spike predictive analysis,
+  * deterministic fault injection (``fault_plan=``, default off) for the
+    self-healing harness: NaN/Inf/exploding grads, poisoned batches,
+    checkpoint write failures and corruption, simulated crashes
+    (``train/faults.py``); recovery lives in ``train/supervisor.py``.
 """
 from __future__ import annotations
 
@@ -28,6 +36,7 @@ class TrainerHooks:
     on_step: Optional[Callable[[int, Dict], None]] = None
     on_checkpoint: Optional[Callable[[int], None]] = None
     on_spike: Optional[Callable[[int], None]] = None
+    on_slow: Optional[Callable[[Dict], None]] = None
 
 
 class Trainer:
@@ -37,36 +46,57 @@ class Trainer:
                  watch_layers=("patch_embed", "embed"),
                  hooks: Optional[TrainerHooks] = None,
                  log_every: int = 10,
-                 state_shardings: Optional[TrainState] = None):
+                 state_shardings: Optional[TrainState] = None,
+                 fault_plan=None,
+                 early_checkpoint_on_slow: bool = True):
         self.step_fn = train_step_fn
         self.state = state
         self.state_shardings = state_shardings
-        self.ckpt = (CheckpointManager(checkpoint_dir, keep_checkpoints)
-                     if checkpoint_dir else None)
+        self.fault_plan = fault_plan
+        if checkpoint_dir and fault_plan is not None:
+            from repro.train.faults import make_checkpoint_manager
+            self.ckpt = make_checkpoint_manager(
+                checkpoint_dir, keep_checkpoints, fault_plan)
+        else:
+            self.ckpt = (CheckpointManager(checkpoint_dir, keep_checkpoints)
+                         if checkpoint_dir else None)
         self.checkpoint_every = checkpoint_every
         self.watchdog = StragglerWatchdog()
+        self.watchdog.on_slow = self._on_slow
         self.rms_monitor = RMSMonitor(watch_layers=watch_layers)
         self.spike_detector = LossSpikeDetector(ignore_first=0)
         self.hooks = hooks or TrainerHooks()
         self.log_every = log_every
         self.history: List[Dict] = []
+        self.early_checkpoint_on_slow = early_checkpoint_on_slow
+        self.counters: Dict[str, int] = {
+            "slow_steps": 0, "early_checkpoints": 0}
+        self._early_ckpt_wanted = False
+        self._last_saved_step: Optional[int] = None
 
     # ------------------------------------------------------------------
     def maybe_resume(self) -> int:
-        """Restore the latest checkpoint if one exists. Returns start step.
+        """Restore the latest valid checkpoint if one exists. Returns start
+        step.  Corrupt / torn checkpoints are skipped (CheckpointManager
+        falls back to the newest directory that verifies).
 
         With ``state_shardings`` (the engine's), each leaf is device_put
         straight onto its mesh sharding — resumed state lands sharded, no
         host round-trip through replicated single-device arrays."""
         if self.ckpt is None or self.ckpt.latest_step() is None:
             return int(self.state.step)
+        return self.restore_checkpoint()
+
+    def restore_checkpoint(self, step: Optional[int] = None) -> int:
+        """Load checkpoint ``step`` (default newest valid) into
+        ``self.state``; returns the restored step."""
         if self.state_shardings is not None:
             tree, step, extra = self.ckpt.restore(
-                like=self.state, shardings=self.state_shardings)
+                step, like=self.state, shardings=self.state_shardings)
             self.state = (TrainState(*tree)
                           if isinstance(tree, (list, tuple)) else tree)
             return step
-        tree, step, extra = self.ckpt.restore(like=self.state)
+        tree, step, extra = self.ckpt.restore(step, like=self.state)
         self.state = jax.tree.map(
             lambda ref, arr: jax.device_put(np.asarray(arr)).astype(ref.dtype)
             if hasattr(ref, "dtype") else arr, self.state,
@@ -74,6 +104,12 @@ class Trainer:
         return step
 
     # ------------------------------------------------------------------
+    def _on_slow(self, ev: Dict) -> None:
+        self.counters["slow_steps"] += 1
+        self._early_ckpt_wanted = True
+        if self.hooks.on_slow:
+            self.hooks.on_slow(ev)
+
     def _flush(self, pending: List) -> None:
         """Fetch a block of device metrics in one transfer and run the host
         bookkeeping (spike detector, RMS monitor, watchdog, history, hooks).
@@ -89,7 +125,10 @@ class Trainer:
         for (i, _), metrics in zip(pending, fetched):
             timing = self.watchdog.record(i, dt)
             loss = float(metrics["loss"])
-            self.spike_detector.record(i, loss)
+            new_spikes = self.spike_detector.observe(i, loss)
+            if new_spikes and self.hooks.on_spike:
+                for s in new_spikes:
+                    self.hooks.on_spike(s)
             if "rms" in metrics:
                 self.rms_monitor.record(i, metrics["rms"])
             rec = {"step": i, "loss": loss,
@@ -107,8 +146,18 @@ class Trainer:
         pending.clear()
         self._window_t0 = time.monotonic()
 
+    def _save(self, step: int) -> None:
+        self.ckpt.save_async(step, self.state)
+        self._last_saved_step = step
+        if self.hooks.on_checkpoint:
+            self.hooks.on_checkpoint(step)
+        # the synchronous device->host snapshot must not be billed to the
+        # next window's step timing
+        self._window_t0 = time.monotonic()
+
     def run(self, batch_iter, n_steps: int) -> List[Dict]:
         start = int(self.state.step)
+        plan = self.fault_plan
         # Metrics stay on device between flush boundaries so the step can
         # dispatch asynchronously — float(loss) every step would block the
         # host on every device step and serialize the pipeline. The cost:
@@ -118,31 +167,60 @@ class Trainer:
         pending: List = []
         self._window_t0 = time.monotonic()
         for i in range(start, start + n_steps):
-            step_idx, batch = next(batch_iter) if hasattr(
-                batch_iter, "__next__") else (i, batch_iter(i))
+            if hasattr(batch_iter, "__next__"):
+                data_idx, batch = next(batch_iter)
+            else:
+                out = batch_iter(i)
+                data_idx, batch = out if (isinstance(out, tuple)
+                                          and len(out) == 2) else (i, out)
+            if plan is not None:
+                batch = plan.apply_batch(data_idx, batch)
             self.state, metrics = self.step_fn(self.state, batch)
+            if plan is not None:
+                self.state, metrics = plan.apply_post_step(
+                    i, data_idx, self.state, metrics)
+                plan.maybe_crash(i)
             pending.append((i, metrics))
 
             at_ckpt = (self.ckpt is not None and self.checkpoint_every
                        and (i + 1) % self.checkpoint_every == 0)
             if at_ckpt or not self.log_every or i % self.log_every == 0:
                 self._flush(pending)
+                if self.ckpt is not None:
+                    # a failed async write surfaces here, at the next
+                    # checkpoint/flush boundary, attributed to its step
+                    self.ckpt.poll_error()
             if at_ckpt:
-                self.ckpt.save_async(i + 1, self.state)
-                if self.hooks.on_checkpoint:
-                    self.hooks.on_checkpoint(i + 1)
-                # the synchronous device->host snapshot above must not be
-                # billed to the next window's step timing
-                self._window_t0 = time.monotonic()
+                self._save(i + 1)
+            elif self._early_ckpt_wanted and self.early_checkpoint_on_slow \
+                    and self.ckpt is not None and self.checkpoint_every:
+                # straggler watchdog fired: bank progress now, a failing
+                # host should lose minimal work.  At most one early save
+                # per checkpoint window.
+                self._flush(pending)
+                if self._last_saved_step is None or \
+                        i + 1 - self._last_saved_step >= \
+                        max(self.checkpoint_every // 2, 1):
+                    self._save(i + 1)
+                    self.counters["early_checkpoints"] += 1
+            self._early_ckpt_wanted = False
         self._flush(pending)
         if self.ckpt is not None:
             self.ckpt.wait()
         return self.history
 
     # ------------------------------------------------------------------
+    def rollback(self, step: int) -> None:
+        """Forget all host-side bookkeeping for steps >= ``step`` (the
+        supervisor restored a checkpoint there; those steps re-execute)."""
+        self.history = [h for h in self.history if h["step"] < step]
+        self.spike_detector.rollback(step)
+        self.rms_monitor.rollback(step)
+
     def stability_report(self, layer: Optional[str] = None) -> Dict:
         spikes = self.spike_detector.spike_steps()
-        report: Dict[str, Any] = {"loss_spike_steps": spikes}
+        report: Dict[str, Any] = {"loss_spike_steps": spikes,
+                                  "counters": dict(self.counters)}
         layers = ([layer] if layer else self.rms_monitor.layers())
         for name in layers:
             report[name] = self.rms_monitor.predicts_loss_spike(name, spikes)

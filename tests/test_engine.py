@@ -181,3 +181,31 @@ def test_sharded_save_restore_resume_equivalence(tmp_path):
     losses_resumed = [h["loss"] for h in t2.history]
     np.testing.assert_allclose(losses_full[4:], losses_resumed,
                                rtol=2e-2, atol=2e-2)
+
+
+@needs8
+def test_supervised_nan_recovery_on_sharded_engine(tmp_path):
+    """The self-healing supervisor over the 8-device sharded engine: a NaN
+    injection mid-run is detected, recovery restores the verified
+    checkpoint onto the engine's shardings (params stay partitioned), and
+    the run finishes every step finite."""
+    from repro.configs.base import SupervisorConfig
+    from repro.train import FaultPlan, FaultSpec
+
+    eng = _engine(make_test_mesh((2, 4)), fsdp=True)
+    sup = eng.make_supervisor(
+        eng.init_state(), _batch, checkpoint_dir=str(tmp_path),
+        config=SupervisorConfig(checkpoint_every=4, log_every=0,
+                                detect_warmup=4, spike_min_history=100),
+        fault_plan=FaultPlan([FaultSpec(step=9, kind="nan_grad")]))
+    hist = sup.run(16)
+    rep = sup.report()
+    assert rep["rewinds"] >= 1
+    assert rep["incident_kinds"].get("nonfinite") == 1
+    assert rep["post_recovery_spikes"] == []
+    assert len(hist) == 16
+    assert all(np.isfinite(h["loss"]) for h in hist)
+    _assert_partitioned(sup.trainer.state.params)
+    for leaf, want in zip(jax.tree.leaves(sup.trainer.state.params),
+                          jax.tree.leaves(eng.state_shardings.params)):
+        assert leaf.sharding == want

@@ -1,0 +1,502 @@
+"""Self-healing training suite: fault injection, rewind-and-skip recovery,
+verified checkpoints, crash resume, and the incremental spike detector.
+
+Covers (ISSUE 9):
+  * ``LossSpikeDetector.observe`` incremental-vs-recompute oracle on a
+    churny synthetic loss stream, plus rollback semantics,
+  * checkpoint integrity: per-leaf crc32 in META.json, ``verify`` catching
+    bit flips / truncation / missing META, ``all_steps`` skipping
+    crash-mid-rename artifacts, ``restore`` falling back to the newest
+    valid step, async write failures attributed to their step,
+  * kill-mid-save simulation → bit-identical resume from the previous
+    valid checkpoint,
+  * TrainSupervisor: NaN / explosion / poisoned-batch recovery with
+    deterministic data skip, escalation-to-abort under a sticky fault,
+    deterministic post-recovery replay, and the acceptance-criterion combo
+    run (NaN grad + grad explosion + corrupted checkpoint in one run,
+    supervised finishes ≈ clean while unsupervised demonstrably fails),
+  * simulated crash → auto-resume, straggler → early checkpoint.
+"""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointCorruption, CheckpointManager,
+                              CheckpointWriteError)
+from repro.configs.base import ParallelConfig, SupervisorConfig, TrainConfig
+from repro.core.precision import QuantPolicy
+from repro.data import BigramLM
+from repro.stability import LossSpikeDetector
+from repro.train import (FaultPlan, FaultSpec, SimulatedCrash, Trainer,
+                         TrainSupervisor, TrainingAborted, init_train_state,
+                         make_train_setup, make_train_step)
+
+# --------------------------------------------------------------------------
+# incremental spike detector vs the O(n) recompute oracle
+# --------------------------------------------------------------------------
+
+
+def _churny_stream(n=400, seed=0):
+    """Decaying random-walk loss with injected spike clusters and a level
+    shift — exercises deviation, confirmation and dedup churn."""
+    rng = np.random.RandomState(seed)
+    loss, out = 6.0, []
+    for i in range(n):
+        loss = 0.995 * loss + 0.2 * rng.randn()
+        l = loss
+        if i in (90, 92, 97, 150, 260, 262, 263, 268, 350, 351):
+            l += rng.uniform(3.0, 9.0)
+        if i == 200:
+            loss += 2.0                      # legitimate level shift
+        out.append(float(l))
+    return out
+
+
+@pytest.mark.parametrize("kw", [
+    dict(ignore_first=0, min_history=15),
+    dict(ignore_first=0, min_history=15, dedup_window=5),
+    dict(ignore_first=120, min_history=10),
+    dict(ignore_first=0, min_history=15, min_deviations_in_window=1),
+    dict(ignore_first=0, min_history=15, z_threshold=2.0),
+])
+def test_observe_matches_spike_steps_after_every_step(kw):
+    det = LossSpikeDetector(**kw)
+    acc = []
+    for i, l in enumerate(_churny_stream()):
+        acc += det.observe(i, l)
+        assert acc == det.spike_steps(), f"diverged at step {i}"
+        assert det.events() == acc
+    assert acc, "stream should confirm at least one spike"
+
+
+def test_observe_record_interchangeable():
+    a = LossSpikeDetector(ignore_first=0, min_history=15)
+    b = LossSpikeDetector(ignore_first=0, min_history=15)
+    for i, l in enumerate(_churny_stream(200)):
+        (a.record if i % 3 else a.observe)(i, l)
+        b.observe(i, l)
+    assert a.spike_steps() == b.spike_steps() == b.events()
+
+
+def test_observe_rollback_replays_clean():
+    stream = _churny_stream(300)
+    det = LossSpikeDetector(ignore_first=0, min_history=15)
+    for i, l in enumerate(stream):
+        det.observe(i, l)
+    pre = det.spike_steps()
+    det.rollback(150)
+    assert det.spike_steps() == [s for s in pre if s < 150] == det.events()
+    # re-observing a *clean* continuation emits no stale events
+    ref = LossSpikeDetector(ignore_first=0, min_history=15)
+    for i, l in enumerate(stream[:150]):
+        ref.observe(i, l)
+    for i in range(150, 300):
+        l = stream[149]                      # flat clean tail
+        assert det.observe(i, l) == ref.observe(i, l)
+    assert det.spike_steps() == ref.spike_steps()
+
+
+# --------------------------------------------------------------------------
+# checkpoint integrity
+# --------------------------------------------------------------------------
+
+
+def _tree():
+    return {"a": np.arange(24, dtype=np.float32).reshape(4, 6),
+            "b": np.ones(7, dtype=np.float64)}
+
+
+def test_meta_records_crc32(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep_last=3)
+    m.save(2, _tree())
+    import json
+    with open(tmp_path / "step_00000002" / "META.json") as f:
+        meta = json.load(f)
+    assert all("crc32" in info for info in meta["leaves"].values())
+    m.verify(2)
+
+
+@pytest.mark.parametrize("corruption", ["bitflip", "truncate", "no_meta",
+                                        "missing_leaf"])
+def test_verify_catches_corruption(tmp_path, corruption):
+    m = CheckpointManager(str(tmp_path), keep_last=3)
+    m.save(2, _tree())
+    d = tmp_path / "step_00000002"
+    if corruption == "bitflip":
+        data = bytearray((d / "a.npy").read_bytes())
+        data[-1] ^= 0xFF
+        (d / "a.npy").write_bytes(bytes(data))
+    elif corruption == "truncate":
+        with open(d / "a.npy", "r+b") as f:
+            f.truncate(40)
+    elif corruption == "no_meta":
+        os.remove(d / "META.json")
+    else:
+        os.remove(d / "b.npy")
+    if corruption == "no_meta":
+        assert m.all_steps() == []           # invisible, like mid-rename
+    else:
+        with pytest.raises(CheckpointCorruption):
+            m.verify(2)
+        with pytest.raises(CheckpointCorruption):
+            m.restore(2, like=_tree())       # explicit step stays strict
+        assert m.valid_steps() == []
+
+
+def test_all_steps_skips_mid_rename_artifacts(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep_last=5)
+    m.save(2, _tree())
+    os.makedirs(tmp_path / "step_00000004.tmp")     # kill mid-write
+    os.makedirs(tmp_path / "step_00000006")         # kill mid-rename
+    assert m.all_steps() == [2]
+    assert m.latest_step() == 2
+    tree, step, _ = m.restore(like=_tree())
+    assert step == 2
+
+
+def test_restore_falls_back_to_newest_valid(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep_last=5)
+    for s in (2, 4, 6):
+        m.save(s, {"a": np.full((3, 3), float(s)), "b": np.ones(4)})
+    with open(tmp_path / "step_00000006" / "a.npy", "r+b") as f:
+        f.truncate(30)
+    with pytest.warns(UserWarning, match="skipping corrupt"):
+        tree, step, _ = m.restore(like=_tree())
+    assert step == 4
+    np.testing.assert_array_equal(tree["a"], np.full((3, 3), 4.0))
+    assert m.valid_steps() == [2, 4]
+
+
+def test_save_async_failure_attributed_to_step(tmp_path):
+    from repro.train.faults import FaultyCheckpointManager
+    plan = FaultPlan([FaultSpec(step=4, kind="fail_save", key="step")])
+    m = FaultyCheckpointManager(str(tmp_path), keep_last=3, plan=plan)
+    m.save_async(4, _tree())
+    m._thread.join()
+    with pytest.raises(CheckpointWriteError) as ei:
+        m.poll_error()
+    assert ei.value.step == 4
+    m.save(6, _tree())                       # manager still usable after
+    assert m.valid_steps() == [6]
+
+
+# --------------------------------------------------------------------------
+# train-loop fixtures (one jitted step shared by every loop test)
+# --------------------------------------------------------------------------
+
+N_VOCAB_BATCH, SEQ = 2, 16
+
+
+@pytest.fixture(scope="module")
+def loop(reduced):
+    cfg, bundle, _ = reduced("smollm-360m")
+    tc = TrainConfig(learning_rate=1e-3, warmup_steps=2, total_steps=100,
+                     beta2=0.95, loss_scaler="none")
+    opt, scaler = make_train_setup(tc)
+    fn = jax.jit(make_train_step(bundle, QuantPolicy("bf16"),
+                                 ParallelConfig(remat="block"), tc, opt,
+                                 scaler))
+    cache = {}
+
+    def data_fn(j):
+        if j not in cache:
+            d = BigramLM(cfg.vocab_size, seed=1000 + j, temperature=0.3)
+            cache[j] = jax.tree.map(jnp.asarray, d.batch(N_VOCAB_BATCH, SEQ))
+        return cache[j]
+
+    def fresh_state():
+        from repro.models.params import init_params
+        params = init_params(bundle.param_specs, jax.random.PRNGKey(0))
+        return init_train_state(params, opt, scaler)
+
+    return fn, fresh_state, data_fn
+
+
+# EMA-detector lane: at this toy scale the loss is nearly flat (std ~0.03)
+# so the z-score spike detector would confirm "spikes" on pure noise —
+# spike_min_history > run length keeps it out of these runs; the dedicated
+# spike test below enables it with a z that only a real spike clears.
+SUP_CFG = SupervisorConfig(checkpoint_every=5, keep_checkpoints=10,
+                           log_every=0, detect_warmup=5,
+                           grad_norm_ratio=12.0, loss_jump_ratio=2.0,
+                           spike_min_history=100)
+
+# z must sit between the short-history noise z (~4.2 here) and the spike's
+# *confirming* second deviation, whose z is capped near 1/sqrt(ema_alpha)
+# ~= 7.1 because the first deviant observation inflates the running var.
+SPIKE_CFG = SupervisorConfig(checkpoint_every=5, keep_checkpoints=10,
+                             log_every=0, detect_warmup=5,
+                             grad_norm_ratio=1e9, loss_jump_ratio=1e9,
+                             spike_min_history=10, spike_z=6.0)
+
+
+def _supervise(loop, tmp, plan=None, n=30, cfg=SUP_CFG):
+    fn, fresh_state, data_fn = loop
+    shutil.rmtree(tmp, ignore_errors=True)
+    sup = TrainSupervisor(fn, fresh_state(), data_fn, checkpoint_dir=str(tmp),
+                          config=cfg, fault_plan=plan)
+    hist = sup.run(n)
+    return sup, hist
+
+
+# --------------------------------------------------------------------------
+# crash recovery / resume
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_kill_mid_save_resume_bit_identical(loop, tmp_path):
+    """Torn write (truncated leaf + stray .tmp) on the newest checkpoint:
+    resume falls back to the previous valid step and replays the exact
+    uninterrupted trajectory (same jitted fn => bitwise losses)."""
+    fn, fresh_state, data_fn = loop
+
+    t_full = Trainer(fn, fresh_state(), checkpoint_dir=str(tmp_path / "a"),
+                     checkpoint_every=2, log_every=0,
+                     early_checkpoint_on_slow=False)
+    t_full.run(data_fn, 8)
+    full = [h["loss"] for h in t_full.history]
+
+    t1 = Trainer(fn, fresh_state(), checkpoint_dir=str(tmp_path / "b"),
+                 checkpoint_every=2, log_every=0,
+                 early_checkpoint_on_slow=False)
+    t1.run(data_fn, 6)
+    # kill mid-save of step 6: truncate one leaf, leave a half-renamed dir
+    d = tmp_path / "b" / "step_00000006"
+    leaf = sorted(fn_ for fn_ in os.listdir(d) if fn_.endswith(".npy"))[0]
+    with open(d / leaf, "r+b") as f:
+        f.truncate(16)
+    os.makedirs(tmp_path / "b" / "step_00000008.tmp")
+    del t1
+
+    t2 = Trainer(fn, fresh_state(), checkpoint_dir=str(tmp_path / "b"),
+                 checkpoint_every=2, log_every=0,
+                 early_checkpoint_on_slow=False)
+    with pytest.warns(UserWarning, match="skipping corrupt"):
+        start = t2.maybe_resume()
+    assert start == 4                        # previous valid step
+    t2.run(data_fn, 4)
+    resumed = [h["loss"] for h in t2.history]
+    assert resumed == full[4:]               # bit-identical replay
+
+
+@pytest.mark.slow
+def test_simulated_crash_then_auto_resume(loop, tmp_path):
+    fn, fresh_state, data_fn = loop
+    clean = Trainer(fn, fresh_state(), log_every=0)
+    clean.run(data_fn, 10)
+    full = [h["loss"] for h in clean.history]
+
+    plan = FaultPlan([FaultSpec(step=7, kind="crash", key="step")])
+    t1 = Trainer(fn, fresh_state(), checkpoint_dir=str(tmp_path),
+                 checkpoint_every=3, log_every=0, fault_plan=plan,
+                 early_checkpoint_on_slow=False)
+    with pytest.raises(SimulatedCrash):
+        t1.run(data_fn, 10)
+    t1.ckpt.wait()       # the async write of step 6 completed pre-crash
+    del t1                                   # process death
+
+    t2 = Trainer(fn, fresh_state(), checkpoint_dir=str(tmp_path),
+                 checkpoint_every=3, log_every=0,
+                 early_checkpoint_on_slow=False)
+    start = t2.maybe_resume()
+    assert start == 6                        # last boundary before the crash
+    t2.run(data_fn, 4)
+    assert [h["loss"] for h in t2.history] == full[6:]
+
+
+@pytest.mark.slow
+def test_straggler_triggers_early_checkpoint(loop, tmp_path):
+    fn, fresh_state, data_fn = loop
+    slow_events = []
+    from repro.train import TrainerHooks
+    t = Trainer(fn, fresh_state(), checkpoint_dir=str(tmp_path),
+                checkpoint_every=50, log_every=1,
+                hooks=TrainerHooks(on_slow=slow_events.append))
+    # every post-warmup step counts as a straggler: the wiring must bank an
+    # early checkpoint even though no checkpoint_every boundary is reached
+    t.watchdog.threshold = 0.0
+    t.watchdog.warmup_steps = 3
+    t.run(data_fn, 10)
+    assert t.counters["slow_steps"] >= 1
+    assert t.counters["early_checkpoints"] >= 1
+    assert slow_events and t.ckpt.latest_step() is not None
+    assert t.ckpt.latest_step() % 50 != 0    # from the early path
+    assert t.stability_report()["counters"]["early_checkpoints"] >= 1
+
+
+# --------------------------------------------------------------------------
+# supervisor: detect -> rewind -> skip -> escalate
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_supervisor_recovers_from_nan(loop, tmp_path):
+    sup, hist = _supervise(loop, tmp_path / "f",
+                           FaultPlan([FaultSpec(step=12, kind="nan_grad")]))
+    rep = sup.report()
+    assert rep["rewinds"] >= 1 and rep["incident_kinds"]["nonfinite"] == 1
+    assert len(hist) == 30
+    assert all(np.isfinite(h["loss"]) for h in hist)
+    assert rep["post_recovery_spikes"] == []
+    assert rep["data_offset"] > 0
+    # rewound to the checkpoint covering the fault, then skipped past it
+    ev = rep["rewind_log"][0]
+    assert ev["restored_step"] <= ev["fault_step"] < \
+        ev["restored_step"] + ev["skipped"] + 1
+
+
+@pytest.mark.slow
+def test_supervisor_recovery_is_deterministic(loop, tmp_path):
+    """Replaying the post-recovery segment from the restored checkpoint
+    with the final data offset reproduces the supervised history bitwise —
+    rewind-and-skip is a pure function of (checkpoint, data index)."""
+    fn, fresh_state, data_fn = loop
+    sup, hist = _supervise(loop, tmp_path / "f",
+                           FaultPlan([FaultSpec(step=12, kind="nan_grad")]))
+    ev = sup.report()["rewind_log"][-1]
+    c, off = ev["restored_step"], ev["data_offset"]
+
+    replay = Trainer(fn, fresh_state(), checkpoint_dir=str(tmp_path / "f"),
+                     checkpoint_every=0, log_every=0)
+    assert replay.restore_checkpoint(c) == c
+    replay.run(lambda i: data_fn(i + off), 30 - c)
+    want = [h["loss"] for h in hist if h["step"] >= c]
+    assert [h["loss"] for h in replay.history] == want
+
+
+@pytest.mark.slow
+def test_supervisor_recovers_from_confirmed_loss_spike(loop, tmp_path):
+    """Only the App. D spike detector is armed (EMA ratios off): a finite
+    param blow-up elevates the loss for many steps, the detector confirms
+    the spike (>=2 deviations within the window), and the supervisor
+    rewinds past it."""
+    plan = FaultPlan([FaultSpec(step=12, kind="explode_grad", scale=8.0)])
+    sup, hist = _supervise(loop, tmp_path / "sp", plan, cfg=SPIKE_CFG)
+    rep = sup.report()
+    assert rep["incident_kinds"].get("loss_spike", 0) >= 1
+    assert rep["rewinds"] >= 1
+    assert len(hist) == 30
+    assert rep["post_recovery_spikes"] == []
+    assert all(np.isfinite(h["loss"]) for h in hist)
+    assert max(h["loss"] for h in hist) < 7.0   # spiked segment rolled back
+
+
+@pytest.mark.slow
+def test_supervisor_skips_poisoned_batch(loop, tmp_path):
+    # a bad data window: the poisoned batch flows through the real datapath
+    # and its step ends non-finite.  Both faults are keyed by *data index*,
+    # so the rewind-and-skip recovery makes the whole window unreachable —
+    # neither refires on the post-recovery stream.
+    plan = FaultPlan([FaultSpec(step=13, kind="poison_batch"),
+                      FaultSpec(step=13, kind="nan_grad")])
+    sup, hist = _supervise(loop, tmp_path / "p", plan)
+    rep = sup.report()
+    assert rep["fault_plan_fired"].get("poison_batch") == 1
+    assert rep["rewinds"] >= 1
+    assert len(hist) == 30
+    assert all(np.isfinite(h["loss"]) for h in hist)
+    # the poisoned data index is skipped, never re-consumed
+    ev = rep["rewind_log"][0]
+    assert ev["restored_step"] + ev["skipped"] > 13
+    assert rep["data_offset"] > 0
+
+
+@pytest.mark.slow
+def test_supervisor_escalates_then_aborts_on_sticky_fault(loop, tmp_path):
+    # a step-keyed fault that refires on every re-execution: rewinding and
+    # skipping data cannot help, the ladder must abort within budget
+    plan = FaultPlan([FaultSpec(step=12, kind="nan_grad", key="step",
+                                once=False)])
+    fn, fresh_state, data_fn = loop
+    sup = TrainSupervisor(fn, fresh_state(), data_fn,
+                          checkpoint_dir=str(tmp_path), config=SUP_CFG,
+                          fault_plan=plan)
+    with pytest.raises(TrainingAborted) as ei:
+        sup.run(30)
+    rep = ei.value.report
+    # max_retries successful rewinds + the aborting attempt
+    assert rep["rewinds"] == SUP_CFG.max_retries + 1
+    assert rep["escalations"] == SUP_CFG.max_retries
+    assert len(rep["rewind_log"]) == SUP_CFG.max_retries
+    # escalation widened the skip each attempt
+    skips = [ev["skipped"] for ev in rep["rewind_log"]]
+    assert len(skips) > 1
+    assert all(b > a for a, b in zip(skips, skips[1:]))
+
+
+@pytest.mark.slow
+def test_supervisor_retries_failed_save(loop, tmp_path):
+    plan = FaultPlan([FaultSpec(step=10, kind="fail_save", key="step")])
+    sup, hist = _supervise(loop, tmp_path / "s", plan)
+    rep = sup.report()
+    assert rep["save_failures"] >= 1 and rep["save_retries"] >= 1
+    assert rep["rewinds"] == 0               # a failed save is not a rewind
+    assert len(hist) == 30
+    assert sup.trainer.ckpt.latest_step() is not None
+
+
+@pytest.mark.slow
+def test_acceptance_nan_explosion_corrupt_ckpt_combo(loop, tmp_path):
+    """ISSUE 9 acceptance: NaN grad + grad explosion + one corrupted
+    checkpoint in a single supervised run -> finishes all steps with >=1
+    rewind, zero spike firings after recovery, final loss ~ fault-free;
+    the unsupervised run on the same plan demonstrably fails."""
+    fn, fresh_state, data_fn = loop
+
+    def mkplan():
+        return FaultPlan([
+            FaultSpec(step=12, kind="nan_grad"),
+            FaultSpec(step=22, kind="explode_grad"),
+            FaultSpec(step=15, kind="corrupt_ckpt", key="step"),
+        ])
+
+    sup0, clean_hist = _supervise(loop, tmp_path / "clean", None)
+    assert sup0.counters["rewinds"] == 0     # thresholds don't false-fire
+    sup, hist = _supervise(loop, tmp_path / "fault", mkplan())
+    rep = sup.report()
+    assert len(hist) == 30                   # finished all steps
+    assert rep["rewinds"] >= 1
+    assert rep["post_recovery_spikes"] == []
+    assert rep["fault_plan_fired"]["corrupt_ckpt"] == 1
+    assert all(np.isfinite(h["loss"]) for h in hist)
+    assert abs(hist[-1]["loss"] - clean_hist[-1]["loss"]) < 0.4
+
+    # unsupervised on the same plan: NaN params poison the rest of the run
+    t = Trainer(fn, fresh_state(), log_every=0, fault_plan=mkplan())
+    t.run(data_fn, 30)
+    assert not np.isfinite(t.history[-1]["loss"])
+
+
+def test_supervisor_requires_checkpointing(loop):
+    fn, fresh_state, data_fn = loop
+    with pytest.raises(ValueError, match="checkpoint"):
+        TrainSupervisor(fn, fresh_state(), data_fn, checkpoint_dir="",
+                        config=SUP_CFG)
+    with pytest.raises(ValueError, match="checkpoint"):
+        TrainSupervisor(fn, fresh_state(), data_fn, checkpoint_dir="/tmp/x",
+                        config=SupervisorConfig(checkpoint_every=0))
+
+
+def test_fault_plan_validation_and_json(tmp_path):
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec(step=1, kind="gremlin")
+    with pytest.raises(ValueError, match="data.*step"):
+        FaultSpec(step=1, kind="nan_grad", key="both")
+    plan = FaultPlan.from_json(
+        '[{"step": 3, "kind": "nan_grad"}, '
+        '{"step": 5, "kind": "crash", "key": "step"}]')
+    assert [f.kind for f in plan.faults] == ["nan_grad", "crash"]
+    p = tmp_path / "plan.json"
+    p.write_text('[{"step": 7, "kind": "fail_save", "key": "step"}]')
+    plan2 = FaultPlan.from_json(str(p))
+    assert plan2.faults[0].step == 7
+    # once-semantics: a spec fires a single time
+    spec = plan.faults[0]
+    assert plan._match(3, ("nan_grad",), "data") is spec
+    assert plan._match(3, ("nan_grad",), "data") is None
+    assert plan.fired_counts() == {"nan_grad": 1, "crash": 0}
