@@ -113,6 +113,60 @@ def measure_ops(backend: str = "xla", b: int = 4096, dim: int = 1024,
     return out
 
 
+def measure_fp8_ops(backend: str = "xla", b: int = 4096, dim: int = 1024,
+                    iters: int = 5, fallback_ratio: float = 8.0) -> dict:
+    """Wall-clock the fp8 ops (kernels/fp8_matmul) through the dispatch
+    layer, plus their roofline model, under the bench-lane ``modeled``
+    convention: on anything but a real TPU the headline ``*_s`` entries
+    are roofline-derived and the row says ``"modeled": true`` (CPU
+    wall-clock of a TPU kernel path is noise); on a TPU the measured
+    wall-clock is the row. Both raw series are always attached.
+
+    The row also carries the ``fp8_fallback_rate`` gauge — the fraction
+    of activation blocks the dynamic outlier check sends down the bf16
+    path at ``fallback_ratio`` — the same quantity the telemetry health
+    counters (``qh/*/fp8_fallback_frac``) track per train step.
+    """
+    from repro.kernels.fp8_matmul import ops as F8
+    platform = jax.devices()[0].platform
+    modeled = platform != "tpu"
+    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, (b, dim), jnp.bfloat16)
+    w = jax.random.normal(kw, (dim, 4 * dim), jnp.float32) * 0.1
+    w_q, s_w = F8.tensor_quantize(w)
+    x_q, s_x = F8.row_quantize(x)
+    row_scale = s_x * s_w.reshape(())
+    _, s_blk = F8.block_quantize(x)
+    fb_rate = float(jnp.mean(F8.fallback_mask(s_blk, fallback_ratio)))
+    wall = {
+        "block_quantize": _wallclock(
+            lambda: F8.block_quantize(x, backend=backend), iters=iters),
+        "fp8_matmul_dequant": _wallclock(
+            lambda: F8.fp8_matmul_dequant(x_q, w_q, row_scale,
+                                          backend=backend), iters=iters),
+        "fp8_mixed_matmul": _wallclock(
+            lambda: F8.fp8_mixed_matmul(x, w_q, s_w,
+                                        fallback_ratio=fallback_ratio,
+                                        backend=backend), iters=iters),
+    }
+    # roofline: fp8 dots run the MXU at the int8 rate (2x bf16); the
+    # mixed matmul blends fp8 and bf16 dot time by the fallback rate
+    fl = 2.0 * b * dim * (4 * dim)
+    t_q = _time_model(3 * b * dim,
+                      3 * b * dim + 4 * (b // 128) * (dim // 128))
+    t_f8 = _time_model(fl, b * dim + dim * 4 * dim + 2 * b * 4 * dim,
+                       int8=True)
+    t_bf = _time_model(fl, 2 * b * dim + 2 * dim * 4 * dim + 2 * b * 4 * dim)
+    model = {"block_quantize": t_q, "fp8_matmul_dequant": t_f8,
+             "fp8_mixed_matmul":
+                 t_q + (1 - fb_rate) * t_f8 + fb_rate * t_bf}
+    src = model if modeled else wall
+    return {"modeled": modeled, "platform": platform, "b": b, "dim": dim,
+            "fp8_fallback_rate": fb_rate,
+            **{f"{k}_s": v for k, v in src.items()},
+            "wallclock_s": wall, "roofline_s": model}
+
+
 def run(out_json: str | None = None, backend: str = "xla") -> dict:
     results = {}
     print(f"{'dim':>6} {'b=seq*bs':>9} | {'quant%':>7} {'fwd speedup':>12} "
@@ -159,6 +213,19 @@ def run(out_json: str | None = None, backend: str = "xla") -> dict:
     for be, ops_t in measured.items():
         row = "  ".join(f"{k}={v*1e3:.2f}ms" for k, v in ops_t.items())
         print(f"  [{be}] {row}")
+
+    # fp8 rows (kernels/fp8_matmul): wall-clock on TPU, roofline-modeled
+    # elsewhere — the "modeled" flag is part of the row schema
+    f8 = {"xla": measure_fp8_ops("xla")}
+    if backend != "xla":
+        f8[backend] = measure_fp8_ops(backend)
+    results["fp8_ops"] = f8
+    for be, r in f8.items():
+        tag = "modeled" if r["modeled"] else f"measured@{r['platform']}"
+        print(f"  [fp8/{be}] ({tag}) quantize={r['block_quantize_s']*1e3:.2f}ms"
+              f"  matmul_dequant={r['fp8_matmul_dequant_s']*1e3:.2f}ms"
+              f"  mixed={r['fp8_mixed_matmul_s']*1e3:.2f}ms"
+              f"  fallback_rate={r['fp8_fallback_rate']:.3f}")
 
     if out_json:
         with open(out_json, "w") as f:

@@ -180,6 +180,11 @@ class TrainConfig:
     microbatch_steps: int = 1        # gradient accumulation
     checkpoint_every: int = 1000
     keep_checkpoints: int = 3
+    quant_health_metrics: bool = True  # quantized modes only: per-group
+    # device-side health scalars (fp8 fallback-block fraction, int8 clip
+    # fraction, weight absmax — telemetry/health.py) ride the existing
+    # metrics dict; fetched only at flush boundaries, never a per-step
+    # sync. Off = the jitted step is bit-identical to pre-telemetry.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -268,6 +273,21 @@ class ServeConfig:
     seed: int = 0                    # engine PRNG seed: temperature>0
     # sampling folds (seed, request uid, generation step) into the key,
     # so sampled generations are reproducible across batching/scheduling
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryConfig:
+    """Flight-recorder knobs (repro.telemetry, DESIGN.md §15).
+
+    ``path=None`` disables the JSONL sink entirely; a disabled Telemetry
+    is a no-op object the train/serve loops thread unconditionally.
+    ``profile_steps`` is an inclusive (start, stop) step window wrapped
+    in ``jax.profiler`` start/stop (the ``--profile-steps A:B`` CLI
+    flag); traces land in ``profile_dir``.
+    """
+    path: Optional[str] = None       # JSONL event file (None = off)
+    profile_steps: Optional[Tuple[int, int]] = None
+    profile_dir: str = "/tmp/repro-profile"
 
 
 @dataclasses.dataclass(frozen=True)

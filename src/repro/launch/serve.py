@@ -28,6 +28,7 @@ from repro.configs import ALL_ARCHS, get_reduced_config  # noqa: E402
 from repro.configs.base import ServeConfig  # noqa: E402
 from repro.models import build  # noqa: E402
 from repro.serve import make_serve_engine  # noqa: E402
+from repro.telemetry import Telemetry, parse_profile_steps  # noqa: E402
 
 
 def decode_step_fallback(cfg, args, *, reason: str):
@@ -130,6 +131,14 @@ def main():
     ap.add_argument("--devices", type=int, default=None,
                     help="force N host CPU devices (read pre-jax-import)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--telemetry", default=None, metavar="PATH",
+                    help="write flight-recorder JSONL events here (read "
+                         "with python -m repro.telemetry.report); only the "
+                         "measured generate() call is recorded, not warmup")
+    ap.add_argument("--profile-steps", default=None, metavar="A:B",
+                    help="wrap engine waves A..B (inclusive) in a "
+                         "jax.profiler trace")
+    ap.add_argument("--profile-dir", default="/tmp/repro-profile")
     args = ap.parse_args()
 
     from repro.launch.mesh import make_cli_mesh
@@ -178,8 +187,19 @@ def main():
     # timed run will hit (a single-prompt warmup would leave the other
     # buckets compiling inside the measured window) + the decode step
     engine.generate(params, prompts, max_new_tokens=2)
-    gens, stats = engine.generate(params, prompts,
-                                  max_new_tokens=args.new_tokens)
+    tele = Telemetry(args.telemetry,
+                     profile_steps=parse_profile_steps(args.profile_steps),
+                     profile_dir=args.profile_dir, program="serve",
+                     meta={"arch": args.arch, "quant_mode": args.quant_mode,
+                           "cache_mode": args.cache_mode,
+                           "spec_mode": args.spec_mode,
+                           "n_requests": args.n_requests})
+    engine.telemetry = tele
+    try:
+        gens, stats = engine.generate(params, prompts,
+                                      max_new_tokens=args.new_tokens)
+    finally:
+        tele.close()
     print(f"[serve] {stats['new_tokens']} new tokens "
           f"({stats['prefill_tokens']} prefilled) in "
           f"{stats['wall_s']:.2f}s — {stats['tokens_per_s']:.0f} tok/s, "
@@ -208,6 +228,9 @@ def main():
                   f"{stats['tokens_per_model_pass']:.2f} tokens per "
                   f"model pass")
     print("sample:", gens[0][:12])
+    if args.telemetry:
+        print(f"[telemetry] events written to {args.telemetry} — summarize "
+              f"with: python -m repro.telemetry.report {args.telemetry}")
 
 
 if __name__ == "__main__":

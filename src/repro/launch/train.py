@@ -26,11 +26,12 @@ import jax.numpy as jnp
 
 from repro.configs import ALL_ARCHS, get_reduced_config
 from repro.configs.base import (CLIPConfig, ParallelConfig, SupervisorConfig,
-                                TrainConfig)
+                                TelemetryConfig, TrainConfig)
 from repro.core.precision import QuantPolicy
 from repro.data import BigramLM, SyntheticCLIP, SyntheticSeq2Seq
 from repro.launch.mesh import make_cli_mesh
 from repro.models import build
+from repro.telemetry import Telemetry, parse_profile_steps
 from repro.train import FaultPlan, Trainer, make_engine
 
 
@@ -103,6 +104,13 @@ def main():
                     help="shard params/moments over data too (ZeRO-3)")
     ap.add_argument("--pure-dp", action="store_true",
                     help="fold the model axis into data parallelism")
+    ap.add_argument("--telemetry", default=None, metavar="PATH",
+                    help="write flight-recorder JSONL events here (read "
+                         "with python -m repro.telemetry.report)")
+    ap.add_argument("--profile-steps", default=None, metavar="A:B",
+                    help="wrap steps A..B (inclusive) in a jax.profiler "
+                         "trace (written under --profile-dir)")
+    ap.add_argument("--profile-dir", default="/tmp/repro-profile")
     args = ap.parse_args()
 
     cfg = get_reduced_config(args.arch)
@@ -138,33 +146,49 @@ def main():
 
     plan = FaultPlan.from_json(args.fault_plan) if args.fault_plan else None
     ckpt_every = max(args.steps // 3, 10) if args.ckpt_dir else 0
-    if args.supervise:
-        if not args.ckpt_dir:
-            ap.error("--supervise needs --ckpt-dir (rewind is the "
-                     "recovery primitive)")
-        sup = engine.make_supervisor(
-            state, data_fn, checkpoint_dir=args.ckpt_dir,
-            config=SupervisorConfig(checkpoint_every=ckpt_every,
-                                    max_retries=args.max_retries),
-            fault_plan=plan)
-        start = sup.maybe_resume()
-        sup.run(args.steps - start)
-        trainer = sup.trainer
-    else:
-        trainer = Trainer(engine.step, state, checkpoint_dir=args.ckpt_dir,
-                          checkpoint_every=ckpt_every, log_every=10,
-                          state_shardings=engine.state_shardings,
-                          fault_plan=plan)
-        start = trainer.maybe_resume()
-        trainer.run(lambda i: engine.shard_batch(data_fn(i)),
-                    args.steps - start)
-        sup = None
+    tele = Telemetry.from_config(
+        TelemetryConfig(path=args.telemetry,
+                        profile_steps=parse_profile_steps(args.profile_steps),
+                        profile_dir=args.profile_dir),
+        program="train",
+        meta={"arch": args.arch, "quant_mode": args.quant_mode,
+              "kernel_backend": args.kernel_backend,
+              "optimizer": args.optimizer, "steps": args.steps,
+              "supervised": bool(args.supervise)})
+    try:
+        if args.supervise:
+            if not args.ckpt_dir:
+                ap.error("--supervise needs --ckpt-dir (rewind is the "
+                         "recovery primitive)")
+            sup = engine.make_supervisor(
+                state, data_fn, checkpoint_dir=args.ckpt_dir,
+                config=SupervisorConfig(checkpoint_every=ckpt_every,
+                                        max_retries=args.max_retries),
+                fault_plan=plan, telemetry=tele)
+            start = sup.maybe_resume()
+            sup.run(args.steps - start)
+            trainer = sup.trainer
+        else:
+            trainer = Trainer(engine.step, state,
+                              checkpoint_dir=args.ckpt_dir,
+                              checkpoint_every=ckpt_every, log_every=10,
+                              state_shardings=engine.state_shardings,
+                              fault_plan=plan, telemetry=tele)
+            start = trainer.maybe_resume()
+            trainer.run(lambda i: engine.shard_batch(data_fn(i)),
+                        args.steps - start)
+            sup = None
+    finally:
+        tele.close()
     if trainer.history:
         print("final loss:", trainer.history[-1]["loss"])
         print("stability:", (sup or trainer).stability_report())
     else:
         print(f"nothing to do: resumed at step {start} >= --steps "
               f"{args.steps}")
+    if args.telemetry:
+        print(f"[telemetry] events written to {args.telemetry} — summarize "
+              f"with: python -m repro.telemetry.report {args.telemetry}")
 
 
 if __name__ == "__main__":

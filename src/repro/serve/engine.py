@@ -68,7 +68,12 @@ from repro.models import transformer as TF
 from repro.models.params import default_rules, init_params, specs_to_shardings
 from repro.serve.scheduler import SlotScheduler
 from repro.serve.spec import NgramProposer
+from repro.telemetry import MetricsRegistry, as_telemetry
 from repro.train.engine import _axes_to_shardings, make_shard_ctx, set_mesh
+
+#: supervisor counters surfaced in the stats row (stability_source=)
+SUPERVISOR_KEYS = ("rewinds", "data_steps_skipped", "incidents",
+                   "escalations", "save_failures", "save_retries")
 
 
 def prefill_bucket(n: int, lo: int = 8) -> int:
@@ -151,6 +156,13 @@ class ServeEngine:
     blocks_per_slot: int = 0         # block-table width = cdiv(max_len, bs)
     block_bytes: int = 0             # bytes one block costs across layers
     ring_equiv_cache_bytes: int = 0  # what the dense ring cache would cost
+    # observability (DESIGN.md §15): an optional Telemetry flight
+    # recorder (per-request lifecycle events, wave spans, profiler
+    # window) and an optional stability source — a TrainSupervisor (or
+    # its report dict) whose rewind/skip counters surface in the stats
+    # row as supervisor_* for finetune-while-serve deployments
+    telemetry: Any = None
+    stability_source: Any = None
 
     # -- assembly helpers ---------------------------------------------------
     def shard_ctx(self) -> PRM.ShardCtx:
@@ -268,46 +280,80 @@ class ServeEngine:
                                jnp.asarray(steps, jnp.int32))
 
     # -- the serving loop ---------------------------------------------------
-    def _empty_stats(self) -> Dict[str, float]:
-        """The stats-row schema, zero-valued — the single source of truth
-        for :meth:`generate`'s return shape. Both the ``max_new_tokens <
-        1`` early return and the measured path start from this dict, so a
-        new counter added here can never silently miss one of them (the
-        drift the old hand-maintained duplicate suffered)."""
+    def _stats_registry(self) -> MetricsRegistry:
+        """Declare the full stats-row schema as one MetricsRegistry — the
+        single source of truth for :meth:`generate`'s return shape. The
+        ``max_new_tokens < 1`` early return and the measured path both
+        snapshot *this* registry (empty vs filled), so the two key sets
+        are identical by construction — the drift the old hand-mirrored
+        ``_empty_stats`` dict suffered is structurally impossible
+        (pinned by tests/test_telemetry.py)."""
         scfg = self.serve_cfg
-        stats: Dict[str, float] = {
-            "new_tokens": 0, "prefill_tokens": 0, "decode_steps": 0,
-            "prefill_calls": 0, "prefill_chunks": 0,
-            "wall_s": 0.0, "prefill_s": 0.0,
-            "decode_s": 0.0, "tokens_per_s": 0.0,
-            "decode_tokens_per_s": 0.0,
-            "ttft_p50_s": 0.0, "ttft_p95_s": 0.0,
-            # itl_* is decode-only (prefill stalls subtracted); itl_wall_*
-            # keeps the raw wall-clock deltas and prefill_stall_* isolates
-            # what admission/chunk prefills cost decoding neighbours
-            "itl_p50_s": 0.0, "itl_p95_s": 0.0,
-            "itl_wall_p50_s": 0.0, "itl_wall_p95_s": 0.0,
-            "prefill_stall_p50_s": 0.0, "prefill_stall_p95_s": 0.0,
-            # decode-batch efficiency: tokens emitted per (slot × model
-            # pass). Exactly 1.0 for plain decode; speculative
-            # acceptance pushes it toward spec_k + 1
-            "tokens_per_model_pass": 0.0}
-        stats.update({f"sched_{k}": 0 for k in
-                      SlotScheduler(scfg.max_batch, scfg.max_len).counters})
+        reg = MetricsRegistry()
+        for k in ("new_tokens", "prefill_tokens", "decode_steps",
+                  "prefill_calls", "prefill_chunks"):
+            reg.counter(k)
+        for k in ("wall_s", "prefill_s", "decode_s", "tokens_per_s",
+                  "decode_tokens_per_s"):
+            reg.gauge(k)
+        # ttft includes queueing; itl_* is decode-only (prefill stalls
+        # subtracted); itl_wall_* keeps the raw wall-clock deltas and
+        # prefill_stall_* isolates what admission/chunk prefills cost
+        # decoding neighbours. Each renders as {name}_p50_s/_p95_s.
+        for name in ("ttft", "itl", "itl_wall", "prefill_stall"):
+            reg.histogram(name, percentiles=(50, 95), suffix="_s")
+        # decode-batch efficiency: tokens emitted per (slot × model
+        # pass). Exactly 1.0 for plain decode; speculative acceptance
+        # pushes it toward spec_k + 1
+        reg.gauge("tokens_per_model_pass")
+        for k in SlotScheduler(scfg.max_batch, scfg.max_len).counters:
+            reg.counter(f"sched_{k}")
         if scfg.cache_mode == "paged":
-            stats.update({
-                "prefix_lookups": 0, "prefix_hits": 0,
-                "prefix_hit_rate": 0.0, "prefill_tokens_saved": 0,
-                "peak_blocks_in_use": 0, "num_blocks": self.num_blocks,
-                "peak_live_blocks": 0, "block_bytes": self.block_bytes,
-                "peak_cache_bytes": 0,
-                "ring_equiv_cache_bytes": self.ring_equiv_cache_bytes,
-                # speculative decoding (spec_mode="ngram"): drafts
-                # proposed / accepted (the free bonus token per verify
-                # is not counted as accepted) and verify-call count
-                "spec_drafted": 0, "spec_accepted": 0,
-                "spec_acceptance_rate": 0.0, "spec_verify_calls": 0})
-        return stats
+            for k in ("prefix_lookups", "prefix_hits",
+                      "prefill_tokens_saved", "peak_blocks_in_use",
+                      "peak_live_blocks", "peak_cache_bytes"):
+                reg.counter(k)
+            reg.gauge("prefix_hit_rate")
+            reg.counter("num_blocks").set(self.num_blocks)
+            reg.counter("block_bytes").set(self.block_bytes)
+            reg.counter("ring_equiv_cache_bytes").set(
+                self.ring_equiv_cache_bytes)
+            # speculative decoding (spec_mode="ngram"): drafts proposed /
+            # accepted (the free bonus token per verify is not counted
+            # as accepted) and verify-call count
+            for k in ("spec_drafted", "spec_accepted", "spec_verify_calls"):
+                reg.counter(k)
+            reg.gauge("spec_acceptance_rate")
+        # supervisor counters (stability_report()["supervisor"]) for
+        # finetune-while-serve: zero unless a stability_source is attached
+        for k in SUPERVISOR_KEYS:
+            reg.counter(f"supervisor_{k}")
+        return reg
+
+    def _fill_supervisor(self, reg: MetricsRegistry) -> None:
+        """Copy the attached stability source's supervisor counters into
+        the registry (accepts a TrainSupervisor, anything with a
+        ``report()``/``stability_report()``, or a plain dict)."""
+        src = self.stability_source
+        if src is None:
+            return
+        if isinstance(src, dict):
+            rep = src
+        elif hasattr(src, "report"):
+            rep = src.report()
+        elif hasattr(src, "stability_report"):
+            rep = src.stability_report().get("supervisor", {})
+        else:
+            raise TypeError(f"stability_source {type(src).__name__} has "
+                            "no report()/stability_report()")
+        for k in SUPERVISOR_KEYS:
+            if k in rep:
+                reg.counter(f"supervisor_{k}").set(rep[k])
+
+    def _empty_stats(self) -> Dict[str, float]:
+        reg = self._stats_registry()
+        self._fill_supervisor(reg)
+        return reg.snapshot()
 
     def generate(self, params, prompts: Sequence[Sequence[int]], *,
                  max_new_tokens=32, eos_id: Optional[int] = None,
@@ -382,6 +428,11 @@ class ServeEngine:
                              f"{len(prompts)} prompts")
         if not any(m >= 1 for m in budgets):  # prefill samples one token
             return [[] for _ in prompts], self._empty_stats()
+        tele = as_telemetry(self.telemetry)
+        reg = self._stats_registry()
+        h_ttft, h_itl = reg.histogram("ttft"), reg.histogram("itl")
+        h_itl_wall = reg.histogram("itl_wall")
+        h_stall = reg.histogram("prefill_stall")
         sched = SlotScheduler(B, scfg.max_len, rollover=scfg.rollover)
         uids: List[Optional[int]] = [None] * len(prompts)
         for i, p in enumerate(prompts):
@@ -389,6 +440,9 @@ class ServeEngine:
                 uids[i] = sched.submit(
                     p, max_new_tokens=budgets[i], eos_id=eos_id,
                     stop=None if stop is None else stop[i])
+                if tele.enabled:
+                    tele.emit("request", uid=uids[i], event="submitted",
+                              prompt_len=len(p), budget=budgets[i])
         # speculative decoding is greedy-only: acceptance compares drafts
         # against argmax, so temperature>0 engines fall back to plain
         # decode (the reproducible per-(uid, step) sampler keeps that
@@ -421,16 +475,18 @@ class ServeEngine:
         # decode (the only step that reads it)
         prefill_s = decode_s = 0.0
         ttft: Dict[int, float] = {}           # uid -> first-token latency
-        itl: List[float] = []                 # decode-only inter-token deltas
-        itl_wall: List[float] = []            # raw wall-clock deltas
-        stalls: List[float] = []              # per-token prefill stall time
         stall: Dict[int, float] = {}          # slot -> stall since last token
         last_t: Dict[int, float] = {}         # slot -> last token timestamp
         peak_live_blocks = 0
+        wave = 0                              # engine-step index (events)
 
         def _finish(slot, r, now):
             last_t.pop(slot, None)
             stall.pop(slot, None)
+            if tele.enabled:
+                tele.emit("request", uid=r.uid, event="finished",
+                          reason=r.finish_reason,
+                          n_generated=len(r.generated), wave=wave)
             if paged:
                 # KVs written: the context plus every decoded token but
                 # the last (never consumed); full blocks park for reuse
@@ -444,9 +500,14 @@ class ServeEngine:
             sched.preempt(vslot)
             last_t.pop(vslot, None)
             stall.pop(vslot, None)
+            if tele.enabled:
+                tele.emit("request", uid=vr.uid, event="preempted",
+                          slot=vslot, n_generated=len(vr.generated),
+                          wave=wave)
 
         t0 = time.perf_counter()
         while sched.has_work:
+            tele.maybe_profile(wave)
             if paged:
                 mgr.begin_wave()
             admits = sched.admit(fits=fits)
@@ -455,6 +516,13 @@ class ServeEngine:
                 # chunk loop below prefills context[prefilled:] from here
                 r.prefilled = (mgr.admit(slot, r.context, r.remaining_new)
                                if paged else 0)
+                if tele.enabled:
+                    ev = dict(uid=r.uid, event="admitted", slot=slot,
+                              wave=wave, queue_depth=sched.pending)
+                    if paged:       # radix adoption + pool pressure
+                        ev.update(prefix_adopted=r.prefilled,
+                                  live_blocks=mgr.live_blocks)
+                    tele.emit("request", **ev)
             if paged and admits:
                 peak_live_blocks = max(peak_live_blocks, mgr.live_blocks)
             prefilling = sched.prefilling
@@ -505,12 +573,22 @@ class ServeEngine:
                 dur = now - t_pf
                 for slot, r in prefilling:
                     r.prefilled += chunks[slot]
+                    if tele.enabled:
+                        tele.emit("request", uid=r.uid,
+                                  event="prefill_chunk", slot=slot,
+                                  tokens=chunks[slot],
+                                  prefilled=r.prefilled,
+                                  context_len=len(r.context), wave=wave)
                     if r.prefilled >= len(r.context):
                         # prompt fully resident: first token sampled from
                         # the last position's logits; slot joins decode
                         done = sched.record(slot, tok[slot])
                         cur[slot] = tok[slot]
-                        ttft.setdefault(r.uid, now - t0)
+                        if r.uid not in ttft:
+                            ttft[r.uid] = now - t0
+                            tele.emit("request", uid=r.uid,
+                                      event="first_token",
+                                      ttft_s=ttft[r.uid], wave=wave)
                         last_t[slot] = now
                         n_new += 1
                         if done:
@@ -523,8 +601,17 @@ class ServeEngine:
                 n_chunks += len(prefilling)
                 n_prefills += 1
                 prefill_s += dur
+                if tele.enabled:
+                    tele.emit_span("prefill_wave", time.time() - dur, dur,
+                                   wave=wave, slots=len(prefilling),
+                                   tokens=int(sum(chunks.values())),
+                                   bucket=S)
+                    tele.emit("wave", wave=wave, mode="prefill",
+                              dur_s=dur, slots=len(prefilling),
+                              tokens=int(sum(chunks.values())))
             running = sched.running
             if not running:
+                wave += 1
                 continue
             drafts: Dict[int, List[int]] = {}
             if spec_on:
@@ -610,13 +697,13 @@ class ServeEngine:
                         m += 1
                         # the m tokens land together: the wave's wall
                         # gap belongs to the first, the rest are free
-                        itl_wall.append(delta if j == 0 else 0.0)
-                        itl.append(max(delta - stalled, 0.0)
-                                   if j == 0 else 0.0)
+                        h_itl_wall.observe(delta if j == 0 else 0.0)
+                        h_itl.observe(max(delta - stalled, 0.0)
+                                      if j == 0 else 0.0)
                         if done:
                             break
                     if stalled:
-                        stalls.append(stalled)
+                        h_stall.observe(stalled)
                     last_t[slot] = now
                     spec_drafted += len(d)
                     spec_accepted += min(a, m)
@@ -634,6 +721,14 @@ class ServeEngine:
                             len_dirty = True
                 n_steps += 1
                 n_verify += 1
+                if tele.enabled:
+                    v_dur = now - t_dec
+                    tele.emit_span("verify_wave", time.time() - v_dur,
+                                   v_dur, wave=wave)
+                    tele.emit("wave", wave=wave, mode="verify",
+                              dur_s=v_dur, drafted=sum(
+                                  len(d) for d in drafts.values()),
+                              slots=len(drafts))
             else:
                 # -- plain wave: ordinary one-token decode --------------
                 if paged and len_dirty:
@@ -670,10 +765,10 @@ class ServeEngine:
                     cur[slot] = tok[slot]
                     delta = now - last_t[slot]
                     stalled = stall.pop(slot, 0.0)
-                    itl_wall.append(delta)
-                    itl.append(max(delta - stalled, 0.0))
+                    h_itl_wall.observe(delta)
+                    h_itl.observe(max(delta - stalled, 0.0))
                     if stalled:
-                        stalls.append(stalled)
+                        h_stall.observe(stalled)
                     last_t[slot] = now
                     n_live += 1
                     if done:
@@ -682,45 +777,59 @@ class ServeEngine:
                 n_decoded += n_live
                 n_slot_passes += n_live
                 n_steps += 1
+                if tele.enabled:
+                    d_dur = now - t_dec
+                    tele.emit_span("decode_wave", time.time() - d_dur,
+                                   d_dur, wave=wave)
+                    tele.emit("wave", wave=wave, mode="decode",
+                              dur_s=d_dur, slots=n_live)
             decode_s += now - t_dec
+            wave += 1
         dt = time.perf_counter() - t0
 
-        def pct(xs, p):
-            return float(np.percentile(np.asarray(xs), p)) if xs else 0.0
-
-        ttfts = [ttft[u] for u in uids if u in ttft]
-        stats = self._empty_stats()
-        stats.update({
-            "new_tokens": n_new, "prefill_tokens": n_prefill_tok,
-            "decode_steps": n_steps, "prefill_calls": n_prefills,
-            "prefill_chunks": n_chunks,
-            "wall_s": dt, "prefill_s": prefill_s, "decode_s": decode_s,
-            "tokens_per_s": n_new / max(dt, 1e-9),
-            "decode_tokens_per_s": n_decoded / max(decode_s, 1e-9),
-            # per-request latency: TTFT includes queueing time (the
-            # admission-latency signal paged-vs-ring is judged on)
-            "ttft_p50_s": pct(ttfts, 50), "ttft_p95_s": pct(ttfts, 95),
-            # decode-only ITL: wall delta minus prefill stalls (the old
-            # itl_* conflated the two and hid exactly what chunked
-            # prefill fixes); itl_wall_* is the SLO a client feels
-            "itl_p50_s": pct(itl, 50), "itl_p95_s": pct(itl, 95),
-            "itl_wall_p50_s": pct(itl_wall, 50),
-            "itl_wall_p95_s": pct(itl_wall, 95),
-            "prefill_stall_p50_s": pct(stalls, 50),
-            "prefill_stall_p95_s": pct(stalls, 95),
-            "tokens_per_model_pass": n_decoded / max(n_slot_passes, 1)})
-        stats.update({f"sched_{k}": v for k, v in sched.counters.items()})
+        # TTFT includes queueing time (the admission-latency signal
+        # paged-vs-ring is judged on); itl_* is decode-only (prefill
+        # stalls subtracted — itl_wall_* keeps the raw wall deltas the
+        # client feels, prefill_stall_* isolates the difference)
+        h_ttft.observe_many(ttft[u] for u in uids if u in ttft)
+        reg.counter("new_tokens").set(n_new)
+        reg.counter("prefill_tokens").set(n_prefill_tok)
+        reg.counter("decode_steps").set(n_steps)
+        reg.counter("prefill_calls").set(n_prefills)
+        reg.counter("prefill_chunks").set(n_chunks)
+        reg.gauge("wall_s").set(dt)
+        reg.gauge("prefill_s").set(prefill_s)
+        reg.gauge("decode_s").set(decode_s)
+        reg.gauge("tokens_per_s").set(n_new / max(dt, 1e-9))
+        reg.gauge("decode_tokens_per_s").set(n_decoded / max(decode_s, 1e-9))
+        reg.gauge("tokens_per_model_pass").set(
+            n_decoded / max(n_slot_passes, 1))
+        reg.fill_counters(sched.counters, prefix="sched_")
         if paged:
-            stats.update(mgr.stats())
-            stats["peak_live_blocks"] = peak_live_blocks
-            stats["block_bytes"] = self.block_bytes
-            stats["peak_cache_bytes"] = mgr.peak_in_use * self.block_bytes
-            stats["ring_equiv_cache_bytes"] = self.ring_equiv_cache_bytes
-            stats["spec_drafted"] = spec_drafted
-            stats["spec_accepted"] = spec_accepted
-            stats["spec_acceptance_rate"] = (
+            mstats = mgr.stats()
+            reg.gauge("prefix_hit_rate").set(mstats.pop("prefix_hit_rate"))
+            reg.fill_counters(mstats)
+            reg.counter("peak_live_blocks").set(peak_live_blocks)
+            reg.counter("peak_cache_bytes").set(
+                mgr.peak_in_use * self.block_bytes)
+            reg.counter("spec_drafted").set(spec_drafted)
+            reg.counter("spec_accepted").set(spec_accepted)
+            reg.counter("spec_verify_calls").set(n_verify)
+            reg.gauge("spec_acceptance_rate").set(
                 spec_accepted / max(spec_drafted, 1))
-            stats["spec_verify_calls"] = n_verify
+        self._fill_supervisor(reg)
+        stats = reg.snapshot()
+        # itl is wall-minus-stall by construction, so itl_* <= itl_wall_*
+        # holds per sample; the bucketed estimator can invert the order by
+        # up to one bucket width (~12%) when the series diverge, so pin
+        # the definitional invariant at the row level
+        for p in (50, 95):
+            stats[f"itl_p{p}_s"] = min(stats[f"itl_p{p}_s"],
+                                       stats[f"itl_wall_p{p}_s"])
+        if tele.enabled:
+            tele.emit("serve_stats", **stats)
+        if tele._profiling:        # window ran off the end of the run
+            tele._stop_profile(wave)
         return [[] if u is None else sched.results[u] for u in uids], stats
 
 

@@ -100,6 +100,11 @@ class Request:
     stop: List[List[int]] = dataclasses.field(default_factory=list)
     generated: List[int] = dataclasses.field(default_factory=list)
     prefilled: int = 0
+    # why the request finished (an evicted_* counter name), for the
+    # per-request telemetry "finished" event; repr=False keeps the
+    # doctests' Request reprs stable
+    finish_reason: Optional[str] = dataclasses.field(
+        default=None, repr=False)
 
     @property
     def total_len(self) -> int:
@@ -253,6 +258,7 @@ class SlotScheduler:
             done = False
         if done:
             self.counters[reason] += 1
+            req.finish_reason = reason
             self.results[req.uid] = req.generated
             self._slots[slot] = None
         return done

@@ -32,10 +32,12 @@ only a fresh process — ``maybe_resume`` — survives a process death.
 from __future__ import annotations
 
 import math
+import time
 from typing import Callable, Dict, List, Optional
 
 from repro.checkpoint import CheckpointWriteError
 from repro.configs.base import SupervisorConfig
+from repro.telemetry import as_telemetry
 from repro.train.trainer import Trainer, TrainerHooks
 from repro.train.train_step import TrainState
 
@@ -79,7 +81,8 @@ class TrainSupervisor:
                  state_shardings: Optional[TrainState] = None,
                  fault_plan=None,
                  hooks: Optional[TrainerHooks] = None,
-                 watch_layers=("patch_embed", "embed")):
+                 watch_layers=("patch_embed", "embed"),
+                 telemetry=None):
         self.config = cfg = config or SupervisorConfig()
         if not checkpoint_dir or cfg.checkpoint_every <= 0:
             raise ValueError("TrainSupervisor needs a checkpoint_dir and "
@@ -87,6 +90,7 @@ class TrainSupervisor:
                              "primitive")
         self.data_fn = data_fn
         self.data_offset = 0
+        self.telemetry = as_telemetry(telemetry)
         self._user_hooks = hooks or TrainerHooks()
         self.trainer = Trainer(
             step_fn, state, checkpoint_dir=checkpoint_dir,
@@ -94,6 +98,7 @@ class TrainSupervisor:
             keep_checkpoints=cfg.keep_checkpoints,
             watch_layers=watch_layers, log_every=cfg.log_every,
             state_shardings=state_shardings, fault_plan=fault_plan,
+            telemetry=telemetry,
             hooks=TrainerHooks(on_step=self._on_step,
                                on_checkpoint=self._user_hooks.on_checkpoint,
                                on_spike=self._on_spike,
@@ -169,6 +174,9 @@ class TrainSupervisor:
 
     def _recover(self, a: _Anomaly) -> None:
         cfg, t = self.config, self.trainer
+        self.telemetry.emit("anomaly", step=a.step, anomaly=a.kind,
+                            detail=a.detail)
+        t_rw = time.time()
         self.counters["rewinds"] += 1
         self.incident_kinds[a.kind] = self.incident_kinds.get(a.kind, 0) + 1
         if self.counters["rewinds"] > cfg.max_total_rewinds:
@@ -189,8 +197,10 @@ class TrainSupervisor:
 
         try:                                # drain any in-flight write; its
             t.ckpt.wait()                   # failure is counted, not fatal —
-        except CheckpointWriteError:        # recovery supersedes it
+        except CheckpointWriteError as e:   # recovery supersedes it
             self.counters["save_failures"] += 1
+            self.telemetry.emit("save_failure", step=int(e.step),
+                                error=repr(e.__cause__))
         t._early_ckpt_wanted = False
         valid = t.ckpt.valid_steps(max_step=a.step)
         if not valid:
@@ -211,6 +221,16 @@ class TrainSupervisor:
               "restored_step": start, "attempt": self._attempt,
               "skipped": skip, "data_offset": self.data_offset}
         self.rewind_log.append(ev)
+        # the rewind_log entry doubles as a trace span: the span covers
+        # checkpoint drain + restore + host-state rollback
+        dur = time.time() - t_rw
+        self.telemetry.emit_span("rewind", t_rw, dur, step=a.step,
+                                 anomaly=a.kind, restored_step=start,
+                                 attempt=self._attempt, skipped=skip)
+        self.telemetry.emit("rewind", step=a.step, anomaly=a.kind,
+                            detail=a.detail, restored_step=start,
+                            attempt=self._attempt, skipped=skip,
+                            data_offset=self.data_offset)
         if cfg.log_every:
             print(f"[supervisor] {a.kind} at step {a.step}: rewound to "
                   f"step {start} (attempt {self._attempt}), skipping "
@@ -218,6 +238,8 @@ class TrainSupervisor:
 
     def _retry_save(self, e: CheckpointWriteError) -> None:
         self.counters["save_failures"] += 1
+        self.telemetry.emit("save_failure", step=int(e.step),
+                            error=repr(e.__cause__))
         t = self.trainer
         if self.config.log_every:
             print(f"[supervisor] async checkpoint write for step {e.step} "

@@ -19,6 +19,7 @@ from repro.configs.base import ParallelConfig, TrainConfig
 from repro.core.precision import QuantPolicy
 from repro.optim import (clip_by_global_norm, global_norm, make_optimizer,
                          make_scaler, warmup_cosine)
+from repro.telemetry import health
 
 
 class TrainState(NamedTuple):
@@ -109,6 +110,13 @@ def make_train_step(bundle, policy: QuantPolicy, parallel: ParallelConfig,
             "n_skipped_tensors": sstats["n_skipped_tensors"],
             "loss_scale": sstats["loss_scale"],
         }
+        # quant-health scalars (telemetry/health.py): independent device
+        # reductions on (params, grads) at the top level — outside the
+        # grad transform and the microbatch scan, so no tracer crosses a
+        # custom_vjp/scan boundary, and removing them cannot change the
+        # update. Fetched with the rest of the metrics at flush time.
+        out_metrics.update(health.quant_health(state.params, grads,
+                                               train_cfg))
         if "rms" in aux:                       # per-tensor RMS_t (Fig. 9)
             out_metrics["rms"] = aux["rms"]
         new_state = TrainState(params, opt_state, scaler_state,

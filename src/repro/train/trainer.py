@@ -28,6 +28,8 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.distributed.straggler import StragglerWatchdog
 from repro.stability import LossSpikeDetector, RMSMonitor
+from repro.telemetry import as_telemetry
+from repro.telemetry.health import qh_items, summarize_rms
 from repro.train.train_step import TrainState
 
 
@@ -48,8 +50,10 @@ class Trainer:
                  log_every: int = 10,
                  state_shardings: Optional[TrainState] = None,
                  fault_plan=None,
-                 early_checkpoint_on_slow: bool = True):
+                 early_checkpoint_on_slow: bool = True,
+                 telemetry=None):
         self.step_fn = train_step_fn
+        self.telemetry = as_telemetry(telemetry)
         self.state = state
         self.state_shardings = state_shardings
         self.fault_plan = fault_plan
@@ -120,15 +124,19 @@ class Trainer:
         dispatch overhead."""
         if not pending:
             return
+        tele = self.telemetry
+        t_fl = time.time()
         fetched = jax.device_get([m for _, m in pending])
         dt = (time.monotonic() - self._window_t0) / len(pending)
         for (i, _), metrics in zip(pending, fetched):
             timing = self.watchdog.record(i, dt)
             loss = float(metrics["loss"])
             new_spikes = self.spike_detector.observe(i, loss)
-            if new_spikes and self.hooks.on_spike:
+            if new_spikes:
                 for s in new_spikes:
-                    self.hooks.on_spike(s)
+                    tele.emit("spike", step=int(s), observed_at=i)
+                    if self.hooks.on_spike:
+                        self.hooks.on_spike(s)
             if "rms" in metrics:
                 self.rms_monitor.record(i, metrics["rms"])
             rec = {"step": i, "loss": loss,
@@ -136,6 +144,11 @@ class Trainer:
                    "lr": float(metrics["lr"]),
                    "n_skipped": int(metrics["n_skipped_tensors"]),
                    "dt": timing["dt"], "slow": timing["slow"]}
+            if tele.enabled:
+                ev = dict(rec, **qh_items(metrics))
+                if "rms" in metrics:
+                    ev.update(summarize_rms(metrics["rms"]))
+                tele.emit("train_step", **ev)
             self.history.append(rec)
             if self.hooks.on_step:
                 self.hooks.on_step(i, rec)
@@ -143,12 +156,23 @@ class Trainer:
                 print(f"[trainer] step {i} loss {loss:.4f} "
                       f"gnorm {rec['grad_norm']:.3f} dt {timing['dt']*1e3:.0f}ms"
                       + (" SLOW" if timing["slow"] else ""))
+        # the flush span covers the one blocking device_get for the whole
+        # window — in a Chrome trace, host sync time is this span
+        tele.emit_span("flush", t_fl, time.time() - t_fl,
+                       step=pending[-1][0], n_steps=len(pending))
+        tele.emit("flush", step=pending[-1][0], n_steps=len(pending))
         pending.clear()
         self._window_t0 = time.monotonic()
 
     def _save(self, step: int) -> None:
+        t_sv = time.time()
         self.ckpt.save_async(step, self.state)
         self._last_saved_step = step
+        # the span times the synchronous device->host snapshot inside
+        # save_async (the write itself is off-thread)
+        self.telemetry.emit_span("checkpoint_save", t_sv,
+                                 time.time() - t_sv, step=step)
+        self.telemetry.emit("checkpoint", step=step)
         if self.hooks.on_checkpoint:
             self.hooks.on_checkpoint(step)
         # the synchronous device->host snapshot must not be billed to the
@@ -167,6 +191,7 @@ class Trainer:
         pending: List = []
         self._window_t0 = time.monotonic()
         for i in range(start, start + n_steps):
+            self.telemetry.maybe_profile(i)
             if hasattr(batch_iter, "__next__"):
                 data_idx, batch = next(batch_iter)
             else:
